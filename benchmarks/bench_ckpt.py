@@ -1,0 +1,39 @@
+"""Fig 13 + Fig 14: incremental checkpoint size and time across methods."""
+from __future__ import annotations
+
+from typing import Dict, List
+
+from benchmarks.harness import METHODS, MethodResult
+from benchmarks.workloads import ALL_WORKLOADS
+
+
+def run(workloads=None, methods=None) -> List[MethodResult]:
+    import jax
+    out = []
+    for wname in (workloads or ALL_WORKLOADS):
+        wl = ALL_WORKLOADS[wname]()
+        for mname in (methods or METHODS):
+            out.append(METHODS[mname](wl))
+        jax.clear_caches()     # bound jit memory across workloads (1-core box)
+    return out
+
+
+def rows(results: List[MethodResult]) -> List[dict]:
+    table = []
+    for r in results:
+        table.append({
+            "bench": "ckpt",
+            "workload": r.workload,
+            "method": r.method,
+            "total_MB": round(r.total_bytes / 2**20, 3) if not r.failed else "",
+            "total_ckpt_s": round(r.total_ckpt_s, 4) if not r.failed else "",
+            "track_s": round(r.total_track_s, 4) if not r.failed else "",
+            "undo_ms": round((r.undo_s or 0) * 1e3, 2) if not r.failed else "",
+            "undo_MB_loaded": round((r.undo_bytes or 0) / 2**20, 3)
+            if not r.failed else "",
+            "branch_ms": round((r.branch_s or 0) * 1e3, 2)
+            if not r.failed else "",
+            "failed": r.failed,
+            "note": r.note,
+        })
+    return table

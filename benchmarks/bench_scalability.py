@@ -1,0 +1,46 @@
+"""Fig 19: scalability to long sessions — Checkpoint Graph size vs #commits
+and state-diff time vs checkout distance, up to 1000 cell executions."""
+from __future__ import annotations
+
+import time
+from typing import List
+
+import numpy as np
+
+from repro.core import KishuSession, MemoryStore
+
+
+def run(n_commits: int = 1000) -> List[dict]:
+    sess = KishuSession(MemoryStore(), chunk_bytes=1 << 14)
+
+    def touch(ns, which: int):
+        name = f"v{which % 40:02d}"
+        ns[name] = ns[name] * 1.0001
+
+    sess.register("touch", touch)
+    sess.init_state({f"v{i:02d}": np.ones(256, np.float32)
+                     for i in range(40)})
+    commits = []
+    rng = np.random.default_rng(0)
+    sizes = []
+    for i in range(n_commits):
+        commits.append(sess.run("touch", which=int(rng.integers(40))))
+        if (i + 1) % 100 == 0:
+            sizes.append({"bench": "scalability",
+                          "metric": "graph_bytes",
+                          "commits": i + 1,
+                          "graph_MB": round(
+                              sess.graph.total_meta_bytes() / 2**20, 4)})
+    out = sizes
+    head = commits[-1]
+    for dist in (1, 10, 100, 500, 999):
+        if dist >= len(commits):
+            continue
+        target = commits[-1 - dist]
+        t0 = time.perf_counter()
+        plan = sess.graph.diff(head, target)
+        dt = time.perf_counter() - t0
+        out.append({"bench": "scalability", "metric": "diff_time",
+                    "distance": dist, "diff_ms": round(dt * 1e3, 3),
+                    "diverged": plan.n_diverged})
+    return out

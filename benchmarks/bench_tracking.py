@@ -1,0 +1,85 @@
+"""Table 6 / Fig 17: delta-tracking overhead — Kishu (Lemma-1 pruned) vs
+AblatedKishu(check-all) vs a live-instrumentation provenance tracker
+(IPyFlow analogue: sys.settrace line tracing with symbol resolution)."""
+from __future__ import annotations
+
+import sys
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import Namespace, TrackedNamespace
+from benchmarks.harness import run_kishu
+from benchmarks.workloads import ALL_WORKLOADS, Workload
+
+
+def run_traced(wl: Workload) -> Dict[str, float]:
+    """Provenance-style tracker: trace every line executed inside commands,
+    resolving local symbols at each step (the runtime-resolution overhead the
+    paper criticizes in §2.4)."""
+    ns = Namespace()
+    for prefix, sub in wl.init.items():
+        if isinstance(sub, dict):
+            ns.set_tree(prefix, sub)
+        else:
+            ns[prefix] = sub
+    tns = TrackedNamespace(ns)
+
+    resolved = 0
+
+    def tracer(frame, event, arg):
+        nonlocal resolved
+        frame.f_trace_opcodes = True         # per-op instrumentation
+        if event in ("line", "opcode"):
+            # symbol resolution: inspect the frame's locals (id() forces a
+            # real lookup without mutating anything)
+            for v in frame.f_locals.values():
+                resolved += id(v) is None
+        return tracer
+
+    t_exec = 0.0
+    t_overhead = 0.0
+    for cname, args in wl.script:
+        fn = wl.registry[cname]
+        t0 = time.perf_counter()
+        fn(tns, **args)
+        base = time.perf_counter() - t0
+
+        # re-run under tracing on a scratch copy to measure overhead
+        scratch = Namespace({k: (v.copy() if isinstance(v, np.ndarray) else v)
+                             for k, v in ns.items()})
+        stns = TrackedNamespace(scratch)
+        t0 = time.perf_counter()
+        sys.settrace(tracer)
+        try:
+            fn(stns, **args)
+        finally:
+            sys.settrace(None)
+        traced = time.perf_counter() - t0
+        t_exec += base
+        t_overhead += max(traced - base, 0.0)
+    return {"exec_s": t_exec, "track_s": t_overhead}
+
+
+def run(workloads=None) -> List[dict]:
+    out = []
+    for wname in (workloads or ALL_WORKLOADS):
+        wl = ALL_WORKLOADS[wname]()
+        k = run_kishu(wl, undo=False, branch=False)
+        ka = run_kishu(wl, check_all=True, undo=False, branch=False)
+        tr = run_traced(wl)
+        exec_s = max(tr["exec_s"], 1e-9)
+        out.append({
+            "bench": "tracking",
+            "workload": wname,
+            "kishu_track_s": round(k.total_track_s, 4),
+            "check_all_track_s": round(ka.total_track_s, 4),
+            "provenance_track_s": round(tr["track_s"], 4),
+            "kishu_pct_runtime": round(100 * k.total_track_s / exec_s, 2),
+            "speedup_vs_check_all": round(
+                ka.total_track_s / max(k.total_track_s, 1e-9), 2),
+            "speedup_vs_provenance": round(
+                tr["track_s"] / max(k.total_track_s, 1e-9), 2),
+        })
+    return out

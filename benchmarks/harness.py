@@ -1,0 +1,183 @@
+"""Runners executing a Workload under each checkpointing method and
+collecting per-commit size/latency plus checkout timings."""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import numpy as np
+
+from repro.core import (KishuSession, MemoryStore, Namespace,
+                        TrackedNamespace)
+from repro.core.baselines import DetReplaySession, DumpSession, PageIncremental
+from benchmarks.workloads import Workload
+
+
+@dataclass
+class MethodResult:
+    method: str
+    workload: str
+    ckpt_bytes: List[int] = field(default_factory=list)
+    ckpt_s: List[float] = field(default_factory=list)
+    track_s: List[float] = field(default_factory=list)
+    commits: List[str] = field(default_factory=list)
+    undo_s: Optional[float] = None
+    undo_bytes: Optional[int] = None
+    branch_s: Optional[float] = None
+    failed: bool = False
+    note: str = ""
+
+    @property
+    def total_bytes(self) -> int:
+        return int(sum(self.ckpt_bytes))
+
+    @property
+    def total_ckpt_s(self) -> float:
+        return float(sum(self.ckpt_s))
+
+    @property
+    def total_track_s(self) -> float:
+        return float(sum(self.track_s))
+
+
+# ---------------------------------------------------------------------------
+# Kishu (and variants)
+# ---------------------------------------------------------------------------
+
+def run_kishu(wl: Workload, *, check_all: bool = False,
+              det_replay: bool = False, chunk_bytes: int = 1 << 16,
+              undo: bool = True, branch: bool = True) -> MethodResult:
+    store = MemoryStore()
+    cls = DetReplaySession if det_replay else KishuSession
+    sess = cls(store, chunk_bytes=chunk_bytes, check_all=check_all)
+    name = ("kishu_det_replay" if det_replay
+            else "kishu_check_all" if check_all else "kishu")
+    res = MethodResult(name, wl.name)
+
+    for cname, fn in wl.registry.items():
+        if det_replay:
+            sess.register(cname, fn,
+                          deterministic=cname in wl.deterministic)
+        else:
+            sess.register(cname, fn)
+    sess.init_state(wl.init)
+    prev_bytes = store.chunk_bytes_total() + sess.graph.total_meta_bytes()
+
+    for cname, args in wl.script:
+        sess.run(cname, **args)
+        now = store.chunk_bytes_total() + sess.graph.total_meta_bytes()
+        res.ckpt_bytes.append(now - prev_bytes)
+        prev_bytes = now
+        rs = sess.last_run
+        res.ckpt_s.append(rs.detect_s + rs.write_s)
+        res.track_s.append(rs.detect_s)
+        res.commits.append(rs.commit_id)
+
+    if undo and len(res.commits) >= 2:
+        target = res.commits[-2]
+        t0 = time.perf_counter()
+        st = sess.checkout(target)
+        res.undo_s = time.perf_counter() - t0
+        res.undo_bytes = st.bytes_loaded
+        sess.checkout(res.commits[-1])
+
+    if branch and len(res.commits) >= 4:
+        mid = res.commits[len(res.commits) // 2]
+        sess.checkout(mid)
+        # re-run the suffix with perturbed args (a second branch)
+        for cname, args in wl.script[len(wl.script) // 2:]:
+            sess.run(cname, **args)
+        tip_b = sess.graph.head
+        t0 = time.perf_counter()
+        sess.checkout(res.commits[-1])          # switch back to branch A
+        res.branch_s = time.perf_counter() - t0
+    return res
+
+
+# ---------------------------------------------------------------------------
+# Baselines
+# ---------------------------------------------------------------------------
+
+def _apply_script(ns: Namespace, wl: Workload, upto: Optional[int] = None):
+    tns = TrackedNamespace(ns)
+    for cname, args in (wl.script if upto is None else wl.script[:upto]):
+        wl.registry[cname](tns, **args)
+
+
+def run_dump(wl: Workload) -> MethodResult:
+    store = MemoryStore()
+    d = DumpSession(store)
+    res = MethodResult("dump_session", wl.name)
+    ns = Namespace()
+    tns = TrackedNamespace(ns)
+    for prefix, sub in wl.init.items():
+        if isinstance(sub, dict):
+            ns.set_tree(prefix, sub)
+        else:
+            ns[prefix] = sub
+    d.checkpoint(ns, "t0000")
+    for i, (cname, args) in enumerate(wl.script):
+        wl.registry[cname](tns, **args)
+        st = d.checkpoint(ns, f"t{i+1:04d}")
+        if st.failed:
+            res.failed, res.note = True, st.fail_reason
+            return res
+        res.ckpt_bytes.append(st.bytes_written)
+        res.ckpt_s.append(st.ckpt_s)
+        res.track_s.append(0.0)
+    st = d.checkout(ns, f"t{len(wl.script)-1:04d}")
+    res.undo_s, res.undo_bytes = st.checkout_s, st.bytes_loaded
+    st = d.checkout(ns, f"t{len(wl.script)//2:04d}")
+    res.branch_s = st.checkout_s
+    return res
+
+
+def run_page_incremental(wl: Workload) -> MethodResult:
+    store = MemoryStore()
+    p = PageIncremental(store)
+    res = MethodResult("page_incremental", wl.name)
+    ns = Namespace()
+    tns = TrackedNamespace(ns)
+    for prefix, sub in wl.init.items():
+        if isinstance(sub, dict):
+            ns.set_tree(prefix, sub)
+        else:
+            ns[prefix] = sub
+    p.checkpoint(ns, "t0000", parent=None)
+    prev = "t0000"
+    for i, (cname, args) in enumerate(wl.script):
+        wl.registry[cname](tns, **args)
+        tag = f"t{i+1:04d}"
+        st = p.checkpoint(ns, tag, parent=prev)
+        if st.failed:
+            res.failed, res.note = True, st.fail_reason
+            return res
+        prev = tag
+        res.ckpt_bytes.append(st.bytes_written)
+        res.ckpt_s.append(st.ckpt_s)
+        res.track_s.append(0.0)
+    st = p.checkout(ns, f"t{len(wl.script)-1:04d}")
+    res.undo_s, res.undo_bytes = st.checkout_s, st.bytes_loaded
+    st = p.checkout(ns, f"t{len(wl.script)//2:04d}")
+    res.branch_s = st.checkout_s
+    return res
+
+
+def _rename(res: MethodResult, name: str) -> MethodResult:
+    res.method = name
+    return res
+
+
+METHODS = {
+    # paper-faithful: the co-variable is the atomic storage unit (one chunk)
+    "kishu_paper": lambda wl: _rename(
+        run_kishu(wl, chunk_bytes=1 << 34), "kishu_paper"),
+    # beyond-paper: chunk-level dedup inside co-variables (DESIGN.md §2)
+    "kishu_chunked": lambda wl: _rename(
+        run_kishu(wl, chunk_bytes=1 << 16), "kishu_chunked"),
+    "kishu_check_all": lambda wl: run_kishu(wl, check_all=True),
+    "kishu_det_replay": lambda wl: run_kishu(wl, det_replay=True),
+    "dump_session": run_dump,
+    "page_incremental": run_page_incremental,
+}

@@ -1,0 +1,78 @@
+"""Perf hillclimb driver (§Perf methodology): compile a cell under a
+rules-variant, calibrate its scan-aware costs, and print the three roofline
+terms against the baseline artifact.
+
+    PYTHONPATH=src python -m benchmarks.hillclimb \
+        --arch smollm-360m --shape prefill_32k --mesh single \
+        --variant attn_repl --opt attn_fallback=replicate
+
+Each invocation is one hypothesis->change->measure iteration; results land
+in benchmarks/artifacts/dryrun/<cell>__<variant>.json and are summarized
+here and in EXPERIMENTS.md §Perf.
+"""
+import os
+os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=512")
+
+import argparse
+import json
+
+from repro.launch import dryrun
+from benchmarks import roofline
+
+
+def term_row(rec):
+    row = roofline.analyze_record(rec)
+    return row
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--mesh", default="single")
+    ap.add_argument("--variant", required=True)
+    ap.add_argument("--opt", action="append", default=[],
+                    help="rules option key=value (repeatable)")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+
+    rules_opts = {}
+    for kv in args.opt:
+        k, v = kv.split("=", 1)
+        rules_opts[k] = {"true": True, "false": False}.get(v.lower(), v)
+
+    rec = dryrun.run_cell(args.arch, args.shape, args.mesh,
+                          variant=args.variant, rules_opts=rules_opts,
+                          force=args.force)
+    if rec["status"] != "ok":
+        print("variant compile FAILED:", rec.get("error", "")[:400])
+        return
+    dryrun.calibrate_cell(args.arch, args.shape, args.mesh,
+                          variant=args.variant, rules_opts=rules_opts,
+                          force=args.force)
+
+    art = dryrun.ART_DIR
+    with open(os.path.join(
+            art, f"{args.arch}__{args.shape}__{args.mesh}.json")) as f:
+        base = json.load(f)
+    with open(os.path.join(
+            art, f"{args.arch}__{args.shape}__{args.mesh}"
+                 f"__{args.variant}.json")) as f:
+        var = json.load(f)
+
+    b, v = term_row(base), term_row(var)
+    print(f"\n{args.arch} x {args.shape} x {args.mesh}  "
+          f"variant={args.variant} {rules_opts}")
+    print(f"{'term':12s} {'baseline':>12s} {'variant':>12s} {'delta':>8s}")
+    for t in ("compute_s", "memory_s", "collective_s"):
+        d = (v[t] - b[t]) / max(b[t], 1e-12)
+        print(f"{t:12s} {b[t]:12.4e} {v[t]:12.4e} {d:+8.1%}")
+    print(f"{'dominant':12s} {b['dominant']:>12s} {v['dominant']:>12s}")
+    print(f"{'rf_frac':12s} {b['roofline_frac']:12.4f} "
+          f"{v['roofline_frac']:12.4f}")
+    print(f"{'argGiB/dev':12s} {b['arg_GiB_per_dev']:12.2f} "
+          f"{v['arg_GiB_per_dev']:12.2f}")
+
+
+if __name__ == "__main__":
+    main()

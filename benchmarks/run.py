@@ -1,0 +1,111 @@
+"""Benchmark driver — one function per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+
+Prints CSV rows (``bench,...``) per benchmark plus the roofline table from
+the dry-run artifacts (if present).
+"""
+from __future__ import annotations
+
+import argparse
+import csv
+import sys
+import time
+
+
+def _print_rows(rows) -> None:
+    if not rows:
+        return
+    keys = []
+    for r in rows:
+        for k in r:
+            if k not in keys:
+                keys.append(k)
+    w = csv.DictWriter(sys.stdout, fieldnames=keys, extrasaction="ignore")
+    w.writeheader()
+    for r in rows:
+        w.writerow(r)
+    sys.stdout.flush()
+
+
+def bench_ckpt(quick: bool):
+    """Fig 13 (size) + Fig 14 (time) + Fig 15/16 (undo / branch switch)."""
+    from benchmarks import bench_ckpt as b
+    workloads = ["hwlm_like", "sklearn_like"] if quick else None
+    return b.rows(b.run(workloads=workloads))
+
+
+def bench_tracking(quick: bool):
+    """Table 6 / Fig 17 (tracking overhead)."""
+    from benchmarks import bench_tracking as b
+    return b.run(["hwlm_like", "sklearn_like"] if quick else None)
+
+
+def bench_covar_sweep(quick: bool):
+    """Fig 18 (co-variable size sweep)."""
+    from benchmarks import bench_covar_sweep as b
+    return b.run(ks=(1, 10) if quick else (1, 2, 5, 10))
+
+
+def bench_scalability(quick: bool):
+    """Fig 19 (graph growth + diff time)."""
+    from benchmarks import bench_scalability as b
+    return b.run(n_commits=200 if quick else 1000)
+
+
+def bench_compat(quick: bool):
+    """Fig 12 / Tables 4-5 analogue (leaf-type compatibility matrix)."""
+    from benchmarks import bench_compat as b
+    return b.run()
+
+
+def bench_roofline(quick: bool):
+    """Deliverable (g): roofline terms per (arch x shape) from the dry-run."""
+    from benchmarks import roofline
+    rows = []
+    for mesh in ("single", "multi"):
+        for r in roofline.run(mesh=mesh):
+            if r.get("status") == "ok":
+                rows.append({
+                    "bench": "roofline", "mesh": mesh, "arch": r["arch"],
+                    "shape": r["shape"],
+                    "compute_s": f"{r['compute_s']:.4e}",
+                    "memory_s": f"{r['memory_s']:.4e}",
+                    "collective_s": f"{r['collective_s']:.4e}",
+                    "dominant": r["dominant"],
+                    "useful_ratio": round(r["useful_ratio"], 3),
+                    "roofline_frac": round(r["roofline_frac"], 4),
+                })
+            else:
+                rows.append({"bench": "roofline", "mesh": mesh,
+                             "arch": r["arch"], "shape": r["shape"],
+                             "dominant": "SKIP"})
+    return rows
+
+
+ALL = {
+    "ckpt": bench_ckpt,
+    "tracking": bench_tracking,
+    "covar_sweep": bench_covar_sweep,
+    "scalability": bench_scalability,
+    "compat": bench_compat,
+    "roofline": bench_roofline,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--only", choices=list(ALL))
+    args = ap.parse_args()
+    names = [args.only] if args.only else list(ALL)
+    for name in names:
+        t0 = time.time()
+        print(f"# ---- {name} ----", flush=True)
+        rows = ALL[name](args.quick)
+        _print_rows(rows)
+        print(f"# {name} done in {time.time()-t0:.1f}s", flush=True)
+
+
+if __name__ == "__main__":
+    main()

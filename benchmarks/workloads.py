@@ -1,0 +1,207 @@
+"""Benchmark workloads — recorded session scripts with the paper's workload
+traits (§2.2): incremental access (<10% of state per command), ~45:55
+modify:create balance, small per-cell deltas, branchy exploration.
+
+Four workloads mirror the evaluation notebooks' regimes (Table 2):
+  sklearn_like    — text-mining analogue: big corpus loaded once, many small
+                    auxiliary updates (the paper's Fig 2 pattern)
+  hwlm_like       — many (~170) small variables, frequent small updates
+  storesales_like — balanced creation/modification of medium arrays
+  train_like      — an actual reduced-LM training session (params+opt states)
+
+Each workload = (init tree, command registry, script).  Runners execute the
+same script under Kishu, AblatedKishu(check-all), DumpSession,
+PageIncremental, and DetReplay for apples-to-apples size/latency numbers.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Tuple
+
+import numpy as np
+
+MB = 1 << 20
+
+
+@dataclass
+class Workload:
+    name: str
+    init: Dict[str, Any]
+    registry: Dict[str, Callable]
+    script: List[Tuple[str, dict]]
+    deterministic: List[str] = field(default_factory=list)
+
+
+# ---------------------------------------------------------------------------
+def sklearn_like(scale: int = 8) -> Workload:
+    """Load a large corpus once; then many commands touching small slices
+    (cleaning lists, fitting small models, drawing 'plots')."""
+    rng = np.random.default_rng(0)
+    corpus = rng.standard_normal(scale * MB // 4).astype(np.float32)
+
+    def clean_list(ns, which: int, bump: float):
+        ns[f"lists/l{which}"] = ns[f"lists/l{which}"] * 0.9 + bump
+
+    def fit_model(ns, which: int):
+        x = ns[f"lists/l{which}"]
+        ns[f"models/m{which}"] = np.outer(x[:64], x[:64]).astype(np.float32)
+
+    def draw_plot(ns, which: int):
+        ns[f"plots/p{which}"] = ns[f"models/m{which}"].sum(0)
+
+    def drop_column(ns):
+        ns["aux/df"] = ns["aux/df"][:, 1:]
+
+    def clean_tokens(ns, n: int):
+        """Looped control flow over python objects — the cell shape where
+        live-instrumentation provenance tracking explodes (§2.4, Fig 17)."""
+        toks = ns["aux/tokens"]
+        out = []
+        for t in toks[:n]:
+            if t % 3:
+                out.append(t * 2 + 1)
+            else:
+                out.append(t)
+        ns["aux/tokens"] = out + toks[n:]
+
+    init = {"corpus": corpus,
+            "aux": {"df": rng.standard_normal((512, 48)).astype(np.float32),
+                    "tokens": list(range(20_000))},
+            "lists": {f"l{i}": rng.standard_normal(4096).astype(np.float32)
+                      for i in range(8)}}
+    script: List[Tuple[str, dict]] = []
+    for i in range(8):
+        script.append(("clean_list", {"which": i, "bump": 0.1 * i}))
+        script.append(("fit_model", {"which": i}))
+        if i % 2 == 0:
+            script.append(("draw_plot", {"which": i}))
+        if i % 3 == 0:
+            script.append(("clean_tokens", {"n": 5000}))
+        if i == 5:
+            script.append(("drop_column", {}))
+    return Workload("sklearn_like", init,
+                    {"clean_list": clean_list, "fit_model": fit_model,
+                     "draw_plot": draw_plot, "drop_column": drop_column,
+                     "clean_tokens": clean_tokens},
+                    script, deterministic=["fit_model", "draw_plot",
+                                           "clean_tokens"])
+
+
+# ---------------------------------------------------------------------------
+def hwlm_like(n_vars: int = 170) -> Workload:
+    """Many small variables; each command touches a handful (HW-LM's 172
+    variables, Table 7)."""
+    rng = np.random.default_rng(1)
+    init = {"vars": {f"v{i:03d}": rng.standard_normal(2048).astype(np.float32)
+                     for i in range(n_vars)}}
+
+    def update_few(ns, start: int):
+        for i in range(start, start + 5):
+            name = f"vars/v{i % n_vars:03d}"
+            ns[name] = ns[name] * 0.99 + 0.01
+
+    def reduce_pair(ns, i: int, j: int):
+        ns[f"vars/v{i:03d}"] = ns[f"vars/v{i:03d}"] + ns[f"vars/v{j:03d}"]
+
+    script: List[Tuple[str, dict]] = []
+    for k in range(30):
+        script.append(("update_few", {"start": 7 * k}))
+        if k % 3 == 0:
+            script.append(("reduce_pair", {"i": k % n_vars,
+                                           "j": (k * 11 + 3) % n_vars}))
+    return Workload("hwlm_like", init,
+                    {"update_few": update_few, "reduce_pair": reduce_pair},
+                    script, deterministic=["update_few", "reduce_pair"])
+
+
+# ---------------------------------------------------------------------------
+def storesales_like(scale: int = 4) -> Workload:
+    """Balanced create/modify (~45:55) of medium arrays (TS-analysis-like)."""
+    rng = np.random.default_rng(2)
+    init = {"series": {f"s{i}": rng.standard_normal(scale * MB // 16 // 4)
+                       .astype(np.float32) for i in range(4)}}
+
+    def modify(ns, which: int):
+        name = f"series/s{which}"
+        ns[name] = ns[name] * 1.01
+
+    def create(ns, tag: int):
+        base = ns[f"series/s{tag % 4}"]
+        ns[f"derived/d{tag}"] = (base[: len(base) // 4] ** 2).astype(np.float32)
+
+    def aggregate(ns, tag: int):
+        ns[f"aggs/a{tag}"] = np.array(
+            [ns[f"derived/d{tag}"].mean(), ns[f"derived/d{tag}"].std()],
+            np.float32)
+
+    script: List[Tuple[str, dict]] = []
+    for k in range(20):
+        if k % 9 < 5:
+            script.append(("modify", {"which": k % 4}))
+        else:
+            script.append(("create", {"tag": k}))
+            script.append(("aggregate", {"tag": k}))
+    return Workload("storesales_like", init,
+                    {"modify": modify, "create": create,
+                     "aggregate": aggregate},
+                    script, deterministic=["aggregate"])
+
+
+# ---------------------------------------------------------------------------
+def train_like() -> Workload:
+    """A real (reduced) LM training session: params + AdamW moments as the
+    state; phases, eval, lr change — the framework's primary regime."""
+    import jax
+    from repro.models import get_config
+    from repro.models.testing import reduced
+    from repro.optim.adamw import AdamWConfig
+    from repro.train import step as step_lib
+    from repro.data.pipeline import DataState, TokenPipeline
+
+    cfg = reduced(get_config("smollm-360m"), n_layers=4).replace(
+        d_model=128, n_heads=4, n_kv_heads=2, d_ff=256)
+    oc = AdamWConfig(lr=1e-3)
+    pipe = TokenPipeline(cfg.vocab_size, 4, 32)
+    step_fn = step_lib.make_train_step(cfg, oc, remat=False)
+    state0 = step_lib.init_train_state(cfg, jax.random.key(0), oc)
+
+    def train_phase(ns, steps: int):
+        import jax.numpy as jnp
+        state = ns.get_tree("state")
+        ds = DataState(ns["data/seed"], ns["data/step"])
+        for _ in range(steps):
+            batch, ds = pipe.next_batch(ds)
+            batch = {k: jnp.asarray(v) for k, v in batch.items()}
+            state, _ = step_fn(state, batch)
+        ns.set_tree("state", state)
+        ns["data/step"] = int(ds.step)
+
+    def set_lr(ns, lr: float):
+        ns["hparams/lr"] = lr
+
+    def snapshot_metric(ns, tag: int):
+        import jax
+        leaf = jax.tree.leaves(ns.get_tree("state")["params"])[0]
+        ns[f"metrics/m{tag}"] = float(abs(np.asarray(leaf)).mean())
+
+    init = {"state": state0, "data": {"seed": 0, "step": 0},
+            "hparams": {"lr": 1e-3}}
+    script: List[Tuple[str, dict]] = []
+    for k in range(10):
+        script.append(("train_phase", {"steps": 2}))
+        if k % 4 == 1:
+            script.append(("snapshot_metric", {"tag": k}))
+        if k == 5:
+            script.append(("set_lr", {"lr": 5e-4}))
+    return Workload("train_like", init,
+                    {"train_phase": train_phase, "set_lr": set_lr,
+                     "snapshot_metric": snapshot_metric},
+                    script, deterministic=["train_phase"])
+
+
+ALL_WORKLOADS = {
+    "sklearn_like": sklearn_like,
+    "hwlm_like": hwlm_like,
+    "storesales_like": storesales_like,
+    "train_like": train_like,
+}

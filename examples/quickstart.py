@@ -1,0 +1,61 @@
+"""Quickstart: attach Kishu to a toy JAX workflow and time-travel.
+
+    PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import KishuSession, open_store
+
+
+def main() -> None:
+    store = open_store("memory://")          # or dir:///path, sqlite:///db
+    s = KishuSession(store, chunk_bytes=1 << 16)
+
+    # 1. register commands — the "cells" of your workflow
+    def load_data(ns, n):
+        rng = np.random.default_rng(ns["seed"])
+        ns["data/x"] = rng.standard_normal((n, 16)).astype(np.float32)
+
+    def fit(ns, steps, lr):
+        x, w = ns["data/x"], ns["model/w"]
+        for _ in range(steps):
+            w = w - lr * (x.T @ (x @ w)) / len(x)
+        ns["model/w"] = w
+
+    s.register("load_data", load_data)
+    s.register("fit", fit)
+
+    # 2. attach: populate the namespace and commit the initial state
+    s.init_state({"seed": 0, "model": {"w": np.ones((16, 4), np.float32)}})
+    s.run("load_data", n=256)
+
+    # 3. iterate — every command writes an incremental checkpoint
+    c_lr_small = s.run("fit", steps=20, lr=0.01)
+    w_small = s.ns["model/w"].copy()
+    print(f"[{c_lr_small}] trained with lr=0.01, |w|={np.abs(w_small).mean():.4f}")
+    print(f"   checkpoint wrote {s.last_run.write.bytes_written} bytes "
+          f"({s.last_run.covs_updated} co-variables, "
+          f"{s.last_run.covs_skipped} pruned by access tracking)")
+
+    c_lr_big = s.run("fit", steps=20, lr=0.5)
+    print(f"[{c_lr_big}] trained with lr=0.5, "
+          f"|w|={np.abs(s.ns['model/w']).mean():.4f}  <- diverged!")
+
+    # 4. time-travel: undo the bad run — only the diverged co-variable loads
+    st = s.checkout(c_lr_small)
+    print(f"undo -> {c_lr_small}: loaded {st.covs_loaded} co-variables "
+          f"({st.bytes_loaded} B), kept {st.covs_identical} untouched, "
+          f"in {st.wall_s*1e3:.1f} ms")
+    assert np.array_equal(s.ns["model/w"], w_small)
+
+    # 5. branch: different hyperparameters from the same ancestor
+    c_branch = s.run("fit", steps=5, lr=0.05)
+    print(f"[{c_branch}] new branch from {c_lr_small}")
+    print("\ncommit graph:")
+    for e in s.log():
+        mark = "*" if e["head"] else " "
+        print(f" {mark} {e['commit']} <- {e['parent']}  {e['command']}")
+
+
+if __name__ == "__main__":
+    main()

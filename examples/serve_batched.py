@@ -1,0 +1,86 @@
+"""Batched serving with cache state under Kishu: prefix snapshot + rollback.
+
+    PYTHONPATH=src python examples/serve_batched.py
+
+Serves a reduced mamba2 model (O(1) decode state — the long_500k family).
+The decode caches live in a Kishu session: after prefilling a shared system
+prompt, the cache state is committed once and each request batch *branches*
+from it — regenerations (sampling retries, cancelled streams) roll back to
+the prefix commit instead of re-running prefill.
+"""
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import KishuSession, open_store
+from repro.models import get_config, lm
+from repro.models.testing import reduced
+from repro.train import step as step_lib
+
+
+def main() -> None:
+    cfg = reduced(get_config("mamba2-780m"))
+    params = lm.init_params(cfg, jax.random.key(0))
+    decode = jax.jit(step_lib.make_decode_step(cfg))
+
+    B, PREFIX, GEN = 4, 24, 12
+    sess = KishuSession(open_store("memory://"), chunk_bytes=1 << 14)
+
+    def prefill(ns, seed):
+        caches = lm.init_caches(cfg, B, PREFIX + GEN)
+        toks = jax.random.randint(jax.random.key(seed), (B, PREFIX), 0,
+                                  cfg.vocab_size)
+        tok = toks[:, :1]
+        for t in range(PREFIX):
+            tok, caches = decode(params, caches,
+                                 {"tokens": tok, "index": jnp.asarray(t, jnp.int32)})
+            if t + 1 < PREFIX:
+                tok = toks[:, t + 1:t + 2]
+        ns.set_tree("caches", caches)
+        ns["last_tok"] = np.asarray(tok)
+        ns["pos"] = PREFIX
+
+    def generate(ns, n, flavor):
+        caches = ns.get_tree("caches")
+        tok = jnp.asarray(ns["last_tok"])
+        pos = ns["pos"]
+        outs = []
+        for t in range(n):
+            tok, caches = decode(params, caches,
+                                 {"tokens": (tok + flavor) % cfg.vocab_size,
+                                  "index": jnp.asarray(pos + t, jnp.int32)})
+            outs.append(np.asarray(tok))
+        ns.set_tree("caches", caches)
+        ns["last_tok"] = np.asarray(tok)
+        ns["pos"] = pos + n
+        ns["generated"] = np.concatenate(outs, axis=1)
+
+    sess.register("prefill", prefill)
+    sess.register("generate", generate)
+    sess.init_state({})
+
+    t0 = time.time()
+    prefix_commit = sess.run("prefill", seed=7)
+    print(f"prefilled {B}x{PREFIX} tokens in {time.time()-t0:.2f}s "
+          f"-> commit {prefix_commit} "
+          f"({sess.last_run.write.bytes_written/1e3:.0f}KB cache delta)")
+
+    results = {}
+    for flavor in (1, 2, 3):
+        t0 = time.time()
+        st = sess.checkout(prefix_commit)
+        sess.run("generate", n=GEN, flavor=flavor)
+        results[flavor] = sess.ns["generated"][0, :6]
+        print(f"flavor={flavor}: rollback {st.wall_s*1e3:5.1f}ms "
+              f"(loaded {st.covs_loaded}, kept {st.covs_identical}), "
+              f"gen {GEN} toks in {time.time()-t0:.2f}s -> {results[flavor]}")
+    assert not np.array_equal(results[1], results[2])
+    print("3 generations served from one prefill; no recomputation of the "
+          "shared prefix")
+    sess.close()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Assigned architecture configs. Importing this package registers all archs."""
+from repro.configs import (  # noqa: F401
+    mamba2_780m,
+    stablelm_12b,
+    smollm_360m,
+    mistral_nemo_12b,
+    qwen3_1p7b,
+    jamba_1p5_large_398b,
+    whisper_large_v3,
+    phi35_moe_42b,
+    deepseek_v3_671b,
+    qwen2_vl_72b,
+)
+from repro.configs.shapes import SHAPES, input_specs, cells  # noqa: F401
+
+ARCH_IDS = [
+    "mamba2-780m", "stablelm-12b", "smollm-360m", "mistral-nemo-12b",
+    "qwen3-1.7b", "jamba-1.5-large-398b", "whisper-large-v3",
+    "phi3.5-moe-42b-a6.6b", "deepseek-v3-671b", "qwen2-vl-72b",
+]

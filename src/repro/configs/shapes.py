@@ -1,0 +1,117 @@
+"""Assigned input shapes and abstract input specs for the dry-run.
+
+Every (arch x shape) cell resolves to a *step kind* plus a pytree of
+``jax.ShapeDtypeStruct`` stand-ins (weak-type-correct, shardable, zero
+allocation):
+
+  train_4k    -> train_step   tokens/labels [256, 4096]
+  prefill_32k -> prefill_step tokens [32, 32768]
+  decode_32k  -> serve_step   1 new token, KV/SSM cache filled to 32768, B=128
+  long_500k   -> serve_step   1 new token, cache 524288, B=1 (sub-quadratic only)
+
+Modality frontends are stubs: audio provides encoder frame embeddings,
+vlm provides patch/text embeddings + M-RoPE position ids.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models import lm
+
+
+@dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str            # "train" | "prefill" | "decode"
+
+
+SHAPES: Dict[str, ShapeSpec] = {
+    "train_4k": ShapeSpec("train_4k", 4_096, 256, "train"),
+    "prefill_32k": ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    "long_500k": ShapeSpec("long_500k", 524_288, 1, "decode"),
+}
+
+
+def shape_applicable(cfg: ArchConfig, shape: str) -> Tuple[bool, str]:
+    """(applicable, reason-if-not)."""
+    if shape == "long_500k" and not cfg.sub_quadratic:
+        return False, ("long_500k needs sub-quadratic attention; "
+                       f"{cfg.name} is pure full-attention (see DESIGN.md §5)")
+    return True, ""
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(tuple(shape), jnp.dtype(dtype))
+
+
+def token_batch(cfg: ArchConfig, batch: int, seq: int, *,
+                labels: bool) -> Dict[str, Any]:
+    """Abstract input batch for full-sequence steps."""
+    d = cfg.d_model
+    b: Dict[str, Any] = {}
+    if cfg.frontend == "vision":
+        b["embeds"] = _sds((batch, seq, d), cfg.dtype)
+        b["positions_thw"] = _sds((batch, seq, 3), jnp.int32)
+    else:
+        b["tokens"] = _sds((batch, seq), jnp.int32)
+    if cfg.enc_dec:
+        b["enc_embeds"] = _sds((batch, seq, d), cfg.dtype)
+    if labels:
+        b["labels"] = _sds((batch, seq), jnp.int32)
+    return b
+
+
+def decode_batch(cfg: ArchConfig, batch: int) -> Dict[str, Any]:
+    b: Dict[str, Any] = {"index": jax.ShapeDtypeStruct((), jnp.int32)}
+    if cfg.frontend == "vision":
+        b["embeds"] = _sds((batch, 1, cfg.d_model), cfg.dtype)
+    else:
+        b["tokens"] = _sds((batch, 1), jnp.int32)
+    return b
+
+
+def abstract_caches(cfg: ArchConfig, batch: int, seq: int):
+    """ShapeDtypeStruct pytree of decode caches (no allocation)."""
+    return jax.eval_shape(
+        lambda: lm.init_caches(cfg, batch, seq,
+                               enc_seq=min(seq, 4096) if cfg.enc_dec else 0))
+
+
+def input_specs(cfg: ArchConfig, shape: str) -> Dict[str, Any]:
+    """Returns {"kind", "batch", and for decode "caches"} — all abstract."""
+    ok, why = shape_applicable(cfg, shape)
+    if not ok:
+        raise ValueError(f"{cfg.name} x {shape}: {why}")
+    s = SHAPES[shape]
+    if s.kind == "train":
+        return {"kind": "train",
+                "batch": token_batch(cfg, s.global_batch, s.seq_len,
+                                     labels=True)}
+    if s.kind == "prefill":
+        return {"kind": "prefill",
+                "batch": token_batch(cfg, s.global_batch, s.seq_len,
+                                     labels=False)}
+    return {"kind": "decode",
+            "batch": decode_batch(cfg, s.global_batch),
+            "caches": abstract_caches(cfg, s.global_batch, s.seq_len)}
+
+
+def cells(arch_ids: Optional[List[str]] = None) -> List[Tuple[str, str, bool, str]]:
+    """All (arch, shape, applicable, reason) cells — 40 total."""
+    from repro.models.config import get_config
+    from repro import configs as cfgs
+    out = []
+    for a in (arch_ids or cfgs.ARCH_IDS):
+        cfg = get_config(a)
+        for sh in SHAPES:
+            ok, why = shape_applicable(cfg, sh)
+            out.append((a, sh, ok, why))
+    return out

@@ -1,0 +1,37 @@
+"""Kishu core — time-traveling for JAX training/serving sessions.
+
+The paper's contribution (incremental checkpoint & checkout over a
+Checkpoint Graph at co-variable granularity) as a composable library:
+
+    from repro.core import KishuSession, open_store
+    s = KishuSession(open_store("dir:///tmp/ckpt"))
+    s.register("train", train_command)
+    s.init_state({"params": params, "opt": opt_state, "rng": key})
+    c1 = s.run("train", steps=100)
+    c2 = s.run("train", steps=100)
+    s.checkout(c1)          # sub-second undo: loads only diverged co-variables
+"""
+from repro.core.chunkstore import (ChunkStore, DirectoryStore,
+                                   FaultInjectedStore, MemoryStore,
+                                   SQLiteStore, open_store)
+from repro.core.covariable import (CovKey, LeafRecord, RecordBuilder,
+                                   StateDelta, cov_key, detect_delta,
+                                   group_covariables)
+from repro.core.graph import CheckpointGraph, CheckoutPlan, CommitNode
+from repro.core.namespace import (Namespace, TrackedNamespace, flatten_tree,
+                                  unflatten_tree)
+from repro.core.serialize import (ChunkMissingError, OpaqueLeaf,
+                                  SerializationError)
+from repro.core.session import KishuSession, RunStats
+from repro.core.baselines import (DetReplaySession, DumpSession,
+                                  PageIncremental)
+
+__all__ = [
+    "ChunkStore", "DirectoryStore", "FaultInjectedStore", "MemoryStore",
+    "SQLiteStore", "open_store", "CovKey", "LeafRecord", "RecordBuilder",
+    "StateDelta", "cov_key", "detect_delta", "group_covariables",
+    "CheckpointGraph", "CheckoutPlan", "CommitNode", "Namespace",
+    "TrackedNamespace", "flatten_tree", "unflatten_tree",
+    "ChunkMissingError", "OpaqueLeaf", "SerializationError", "KishuSession",
+    "RunStats", "DetReplaySession", "DumpSession", "PageIncremental",
+]

@@ -1,0 +1,185 @@
+"""Incremental checkout — the State Loader (§5.2).
+
+Given the current HEAD and a target commit, compute the diverged co-variables
+via the Checkpoint Graph index (Def 6), load *only* those from their
+manifests, reconstruct shared references (aliases/views), and swap them into
+the live namespace without touching identical co-variables.  Missing or
+corrupt data falls back to recomputation (restore.py).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core.chunkstore import ChunkStore
+from repro.core.covariable import CovKey, LeafRecord
+from repro.core.graph import CheckpointGraph, CheckoutPlan, key_str
+from repro.core.serialize import (ChunkMissingError, SerializationError,
+                                  leaf_from_bytes, view_from_base)
+
+
+@dataclass
+class CheckoutStats:
+    covs_loaded: int = 0
+    covs_deleted: int = 0
+    covs_identical: int = 0
+    covs_recomputed: int = 0
+    bytes_loaded: int = 0
+    wall_s: float = 0.0
+    diff_s: float = 0.0
+
+
+def materialize_manifest(store: ChunkStore, manifest: dict,
+                         stats: Optional[CheckoutStats] = None
+                         ) -> Dict[str, Any]:
+    """Load a co-variable's values from its manifest.
+
+    Reconstructs shared references: one base buffer, members as views/aliases.
+    Raises ChunkMissingError / SerializationError on failure (-> fallback).
+    """
+    if manifest.get("unserializable"):
+        raise SerializationError("manifest flagged unserializable")
+    base_info = manifest["base"]
+    parts = []
+    for c in base_info["chunks"]:
+        data = store.get_chunk(c["key"])
+        if len(data) != c["n"]:
+            raise ChunkMissingError(f"chunk {c['key']}: size mismatch")
+        parts.append(data)
+    blob = b"".join(parts)
+    if len(blob) != base_info["nbytes"]:
+        raise ChunkMissingError("assembled size mismatch")
+    if stats:
+        stats.bytes_loaded += len(blob)
+    base = leaf_from_bytes(blob, base_info["meta"])
+
+    out: Dict[str, Any] = {}
+    for m in manifest["members"]:
+        if m.get("view"):
+            out[m["name"]] = view_from_base(base, m["view"])
+        else:
+            out[m["name"]] = base
+    return out
+
+
+def records_from_manifest(manifest: dict, values: Dict[str, Any]
+                          ) -> Dict[str, LeafRecord]:
+    """Rebuild LeafRecords after checkout without rehashing (det hashes are
+    stored in the manifest)."""
+    det_hex = [] if manifest.get("unserializable") else \
+        manifest["base"].get("det_hashes", [])
+    det = np.array([int(h, 16) for h in det_hex], dtype=np.uint64)
+    base_id = None
+    out = {}
+    for m in manifest["members"]:
+        val = values[m["name"]]
+        from repro.core.serialize import base_of
+        b = base_of(val)
+        if base_id is None:
+            base_id = id(b)
+        out[m["name"]] = LeafRecord(
+            name=m["name"], kind=m["kind"], dtype=m["dtype"],
+            shape=tuple(m["shape"]), nbytes=m["nbytes"], alias_id=id(b),
+            view=m.get("view"), base_hashes=det if len(det) else None)
+    return out
+
+
+class StateLoader:
+    def __init__(self, graph: CheckpointGraph, store: ChunkStore,
+                 fallback=None):
+        self.graph = graph
+        self.store = store
+        self.fallback = fallback      # callable (key, version, stats) -> values
+
+    def load_cov(self, key: CovKey, version: str,
+                 stats: Optional[CheckoutStats] = None) -> Dict[str, Any]:
+        manifest = self.graph.manifest_of(key, version)
+        if manifest is not None and not manifest.get("unserializable"):
+            try:
+                return materialize_manifest(self.store, manifest, stats)
+            except (ChunkMissingError, SerializationError):
+                pass
+        if self.fallback is None:
+            raise ChunkMissingError(
+                f"co-variable {key} @ {version} unavailable and no fallback")
+        if stats:
+            stats.covs_recomputed += 1
+        return self.fallback(key, version, stats)
+
+    def checkout(self, tracked_ns, records: Dict[str, LeafRecord],
+                 target: str) -> Tuple[Dict[str, LeafRecord], CheckoutStats]:
+        """Execute an incremental checkout; mutates the namespace in place.
+
+        Returns (updated record map, stats)."""
+        stats = CheckoutStats()
+        t0 = time.perf_counter()
+        cur = self.graph.head
+        td = time.perf_counter()
+        plan: CheckoutPlan = self.graph.diff(cur, target)
+        stats.diff_s = time.perf_counter() - td
+        stats.covs_identical = len(plan.identical)
+
+        # 1. load diverged co-variables (before mutating anything)
+        loaded: Dict[CovKey, Dict[str, Any]] = {}
+        for key, version in sorted(plan.to_load.items()):
+            loaded[key] = self.load_cov(key, version, stats)
+
+        # 2. swap into the namespace (tracking paused: checkout is not access)
+        new_records = dict(records)
+        with tracked_ns.pause():
+            for key in plan.to_delete:
+                for name in key:
+                    if name in tracked_ns.base:
+                        del tracked_ns.base[name]
+                    new_records.pop(name, None)
+            for key, values in loaded.items():
+                manifest = self.graph.manifest_of(key, plan.to_load[key])
+                for name, val in values.items():
+                    tracked_ns.base[name] = val
+                if manifest is not None and not manifest.get("unserializable"):
+                    new_records.update(records_from_manifest(manifest, values))
+                else:
+                    # recomputed: rebuild records by hashing
+                    from repro.core.covariable import RecordBuilder
+                    rb = RecordBuilder()
+                    cache: Dict[int, Any] = {}
+                    for name, val in values.items():
+                        new_records[name] = rb.build(name, val, cache)
+
+        stats.covs_loaded = len(loaded)
+        stats.covs_deleted = len(plan.to_delete)
+        self.graph.set_head(target)
+        stats.wall_s = time.perf_counter() - t0
+        return new_records, stats
+
+    def materialize_state(self, tracked_ns, target: str
+                          ) -> Tuple[Dict[str, LeafRecord], CheckoutStats]:
+        """Full (non-incremental) load of a state into an empty namespace —
+        the crash-recovery / elastic-resume path."""
+        stats = CheckoutStats()
+        t0 = time.perf_counter()
+        from repro.core.graph import parse_key
+        index = self.graph.nodes[target].state_index
+        new_records: Dict[str, LeafRecord] = {}
+        with tracked_ns.pause():
+            for ks, version in sorted(index.items()):
+                key = parse_key(ks)
+                values = self.load_cov(key, version, stats)
+                manifest = self.graph.manifest_of(key, version)
+                for name, val in values.items():
+                    tracked_ns.base[name] = val
+                if manifest is not None and not manifest.get("unserializable"):
+                    new_records.update(records_from_manifest(manifest, values))
+                else:
+                    from repro.core.covariable import RecordBuilder
+                    rb = RecordBuilder()
+                    cache: Dict[int, Any] = {}
+                    for name, val in values.items():
+                        new_records[name] = rb.build(name, val, cache)
+        stats.covs_loaded = len(index)
+        self.graph.set_head(target)
+        stats.wall_s = time.perf_counter() - t0
+        return new_records, stats

@@ -1,0 +1,181 @@
+"""Incremental checkpoint writing (§5.1).
+
+For each updated co-variable, serialize its *base* buffer, cut it into
+fixed-size chunks, and store only chunks not already present (content
+addressing).  When the same co-variable existed in the parent version with
+identical structure, chunks whose detection hash is unchanged are *referenced*
+from the previous manifest without re-serializing — the beyond-paper
+chunk-dedup (DESIGN.md §2).  Unserializable co-variables are skipped (EAFP,
+§5.1) and flagged for fallback recomputation.
+
+The async writer overlaps chunk I/O with subsequent compute ("think time",
+§2.2): ``commit`` snapshots device arrays to host and enqueues; ``flush``
+drains.  A write deadline marks commits non-durable until the writer catches
+up (straggler mitigation — checkout of a pending chunk simply falls back to
+recomputation).
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import hashing
+from repro.core.chunkstore import ChunkStore, chunk_key
+from repro.core.covariable import CovKey, LeafRecord
+from repro.core.graph import key_str
+from repro.core.serialize import (SerializationError, base_of, leaf_to_bytes,
+                                  view_spec)
+
+
+@dataclass
+class WriteStats:
+    bytes_serialized: int = 0       # bytes of updated co-variables
+    bytes_written: int = 0          # new chunk bytes actually stored
+    chunks_written: int = 0
+    chunks_reused: int = 0          # skipped via detection-hash delta
+    chunks_dedup: int = 0           # skipped via CAS hit
+    unserializable: int = 0
+    wall_s: float = 0.0
+
+
+def _hashes_hex(h: Optional[np.ndarray]) -> List[str]:
+    if h is None:
+        return []
+    return [format(int(x), "016x") for x in np.asarray(h, dtype=np.uint64)]
+
+
+def build_manifest(store: ChunkStore, key: CovKey,
+                   records: List[LeafRecord], ns,
+                   chunk_bytes: int,
+                   prev_manifest: Optional[dict],
+                   stats: WriteStats,
+                   put: Callable[[str, bytes], None]) -> dict:
+    """Serialize one co-variable into a manifest + chunk puts."""
+    members = []
+    for r in records:
+        members.append({"name": r.name, "kind": r.kind, "dtype": r.dtype,
+                        "shape": list(r.shape), "view": r.view,
+                        "nbytes": r.nbytes})
+    if any(r.kind == "opaque" for r in records):
+        stats.unserializable += 1
+        return {"members": members, "unserializable": True}
+
+    base = base_of(ns[records[0].name])
+    try:
+        blob, meta = leaf_to_bytes(base)
+    except SerializationError:
+        stats.unserializable += 1
+        return {"members": members, "unserializable": True}
+
+    det = records[0].base_hashes
+    det_hex = _hashes_hex(det)
+    prev_chunks: Dict[int, dict] = {}
+    if prev_manifest and not prev_manifest.get("unserializable") \
+            and prev_manifest.get("base", {}).get("meta") == meta:
+        prev_det = prev_manifest["base"].get("det_hashes", [])
+        for i, c in enumerate(prev_manifest["base"].get("chunks", [])):
+            if i < len(prev_det):
+                prev_chunks[i] = {"det": prev_det[i], **c}
+
+    chunks = []
+    n = len(blob)
+    n_chunks = max(-(-n // chunk_bytes), 1) if n else 0
+    stats.bytes_serialized += n
+    for i in range(n_chunks):
+        lo, hi = i * chunk_bytes, min((i + 1) * chunk_bytes, n)
+        prev = prev_chunks.get(i)
+        if prev is not None and i < len(det_hex) and prev["det"] == det_hex[i]:
+            # unchanged chunk: reference previous storage, no hashing/copy
+            chunks.append({"key": prev["key"], "n": prev["n"]})
+            stats.chunks_reused += 1
+            continue
+        data = blob[lo:hi]
+        ck = chunk_key(data)
+        if store.has_chunk(ck):
+            stats.chunks_dedup += 1
+        else:
+            put(ck, data)
+            stats.chunks_written += 1
+            stats.bytes_written += len(data)
+        chunks.append({"key": ck, "n": hi - lo})
+
+    return {"members": members, "unserializable": False,
+            "base": {"meta": meta, "nbytes": n, "chunks": chunks,
+                     "det_hashes": det_hex}}
+
+
+class CheckpointWriter:
+    """Sync or async (background-thread) chunk writer."""
+
+    def __init__(self, store: ChunkStore, *, chunk_bytes: int = 1 << 20,
+                 async_write: bool = False, write_deadline_s: float = 0.0):
+        self.store = store
+        self.chunk_bytes = chunk_bytes
+        self.async_write = async_write
+        self.write_deadline_s = write_deadline_s
+        self._q: "queue.Queue" = queue.Queue()
+        self._worker: Optional[threading.Thread] = None
+        self._errors: List[Exception] = []
+        self.pending_keys: set = set()
+        if async_write:
+            self._worker = threading.Thread(target=self._drain, daemon=True)
+            self._worker.start()
+
+    def _drain(self) -> None:
+        while True:
+            item = self._q.get()
+            if item is None:
+                return
+            ck, data = item
+            try:
+                self.store.put_chunk(ck, data)
+            except Exception as e:  # noqa: BLE001
+                self._errors.append(e)
+            finally:
+                self.pending_keys.discard(ck)
+                self._q.task_done()
+
+    def _put(self, ck: str, data: bytes) -> None:
+        if self.async_write:
+            self.pending_keys.add(ck)
+            self._q.put((ck, bytes(data)))
+        else:
+            self.store.put_chunk(ck, data)
+
+    def write_delta(self, delta, ns,
+                    prev_manifest_of: Callable[[CovKey], Optional[dict]]
+                    ) -> Tuple[Dict[str, dict], WriteStats]:
+        t0 = time.perf_counter()
+        stats = WriteStats()
+        manifests: Dict[str, dict] = {}
+        for key, records in delta.updated.items():
+            man = build_manifest(self.store, key, records, ns,
+                                 self.chunk_bytes, prev_manifest_of(key),
+                                 stats, self._put)
+            manifests[key_str(key)] = man
+        if self.async_write and self.write_deadline_s:
+            deadline = time.time() + self.write_deadline_s
+            while self.pending_keys and time.time() < deadline:
+                time.sleep(0.001)
+            # anything still pending is left to the background writer;
+            # checkout before completion falls back to recomputation.
+        stats.wall_s = time.perf_counter() - t0
+        return manifests, stats
+
+    def flush(self) -> None:
+        if self.async_write:
+            self._q.join()
+        if self._errors:
+            errs, self._errors = self._errors, []
+            raise errs[0]
+
+    def close(self) -> None:
+        if self.async_write and self._worker is not None:
+            self._q.put(None)
+            self._worker.join(timeout=5)
+            self._worker = None

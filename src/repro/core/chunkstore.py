@@ -1,0 +1,309 @@
+"""Content-addressed chunk store with pluggable backends.
+
+The Checkpoint Graph stores versioned co-variables as *manifests* referencing
+immutable chunks keyed by blake2b-128 of their content (exact, unlike the
+detection hash).  Content addressing gives cross-version and cross-branch
+dedup for free — the storage-level core of Kishu's "small incremental
+checkpoints" result, plus our beyond-paper chunk-level dedup (DESIGN.md §2).
+
+Backends:
+  - MemoryStore     — dicts (benchmark baseline for pure algorithm cost)
+  - DirectoryStore  — one file per chunk, sharded dirs; shard-local writers
+                      on a multi-host cluster never contend (DESIGN.md §8)
+  - SQLiteStore     — single-file deployment, as the paper ships (§6.1)
+
+Fault-injection wrappers simulate chunk loss (-> fallback recomputation) and
+slow hosts (-> straggler deadline / async writer tests).
+"""
+from __future__ import annotations
+
+import hashlib
+import json
+import os
+import sqlite3
+import threading
+import time
+from typing import Dict, Iterable, List, Optional
+
+from repro.core.serialize import ChunkMissingError
+
+
+def chunk_key(data: bytes) -> str:
+    return hashlib.blake2b(data, digest_size=16).hexdigest()
+
+
+class ChunkStore:
+    """Interface: immutable chunks + small JSON metadata documents."""
+
+    def put_chunk(self, key: str, data: bytes) -> bool:
+        raise NotImplementedError
+
+    def get_chunk(self, key: str) -> bytes:
+        raise NotImplementedError
+
+    def has_chunk(self, key: str) -> bool:
+        raise NotImplementedError
+
+    def put_meta(self, name: str, doc: dict) -> None:
+        raise NotImplementedError
+
+    def get_meta(self, name: str) -> Optional[dict]:
+        raise NotImplementedError
+
+    def list_meta(self, prefix: str) -> List[str]:
+        raise NotImplementedError
+
+    def delete_chunk(self, key: str) -> None:
+        raise NotImplementedError
+
+    # ---- stats ----
+    def chunk_bytes_total(self) -> int:
+        raise NotImplementedError
+
+    def n_chunks(self) -> int:
+        raise NotImplementedError
+
+
+class MemoryStore(ChunkStore):
+    def __init__(self):
+        self.chunks: Dict[str, bytes] = {}
+        self.meta: Dict[str, dict] = {}
+        self.put_count = 0
+        self.put_bytes = 0
+
+    def put_chunk(self, key, data):
+        self.put_count += 1
+        if key in self.chunks:
+            return False
+        self.chunks[key] = bytes(data)
+        self.put_bytes += len(data)
+        return True
+
+    def get_chunk(self, key):
+        try:
+            return self.chunks[key]
+        except KeyError:
+            raise ChunkMissingError(key) from None
+
+    def has_chunk(self, key):
+        return key in self.chunks
+
+    def delete_chunk(self, key):
+        self.chunks.pop(key, None)
+
+    def put_meta(self, name, doc):
+        self.meta[name] = json.loads(json.dumps(doc))
+
+    def get_meta(self, name):
+        return self.meta.get(name)
+
+    def list_meta(self, prefix):
+        return sorted(k for k in self.meta if k.startswith(prefix))
+
+    def chunk_bytes_total(self):
+        return sum(len(v) for v in self.chunks.values())
+
+    def n_chunks(self):
+        return len(self.chunks)
+
+
+class DirectoryStore(ChunkStore):
+    def __init__(self, root: str):
+        self.root = root
+        os.makedirs(os.path.join(root, "chunks"), exist_ok=True)
+        os.makedirs(os.path.join(root, "meta"), exist_ok=True)
+
+    def _chunk_path(self, key: str) -> str:
+        return os.path.join(self.root, "chunks", key[:2], key)
+
+    def put_chunk(self, key, data):
+        path = self._chunk_path(key)
+        if os.path.exists(path):
+            return False
+        os.makedirs(os.path.dirname(path), exist_ok=True)
+        tmp = path + f".tmp.{os.getpid()}.{threading.get_ident()}"
+        with open(tmp, "wb") as f:
+            f.write(data)
+        os.replace(tmp, path)  # atomic; idempotent across concurrent writers
+        return True
+
+    def get_chunk(self, key):
+        try:
+            with open(self._chunk_path(key), "rb") as f:
+                return f.read()
+        except FileNotFoundError:
+            raise ChunkMissingError(key) from None
+
+    def has_chunk(self, key):
+        return os.path.exists(self._chunk_path(key))
+
+    def delete_chunk(self, key):
+        try:
+            os.remove(self._chunk_path(key))
+        except FileNotFoundError:
+            pass
+
+    def _meta_path(self, name: str) -> str:
+        return os.path.join(self.root, "meta", name.replace("/", "__") + ".json")
+
+    def put_meta(self, name, doc):
+        path = self._meta_path(name)
+        tmp = path + ".tmp"
+        with open(tmp, "w") as f:
+            json.dump(doc, f)
+        os.replace(tmp, path)
+
+    def get_meta(self, name):
+        try:
+            with open(self._meta_path(name)) as f:
+                return json.load(f)
+        except FileNotFoundError:
+            return None
+
+    def list_meta(self, prefix):
+        mdir = os.path.join(self.root, "meta")
+        pre = prefix.replace("/", "__")
+        return sorted(f[:-5].replace("__", "/") for f in os.listdir(mdir)
+                      if f.startswith(pre) and f.endswith(".json"))
+
+    def chunk_bytes_total(self):
+        total = 0
+        cdir = os.path.join(self.root, "chunks")
+        for d, _, files in os.walk(cdir):
+            for f in files:
+                total += os.path.getsize(os.path.join(d, f))
+        return total
+
+    def n_chunks(self):
+        return sum(len(files) for _, _, files in
+                   os.walk(os.path.join(self.root, "chunks")))
+
+
+class SQLiteStore(ChunkStore):
+    def __init__(self, path: str):
+        self.path = path
+        self._local = threading.local()
+        con = self._con()
+        con.execute("CREATE TABLE IF NOT EXISTS chunks"
+                    " (key TEXT PRIMARY KEY, data BLOB)")
+        con.execute("CREATE TABLE IF NOT EXISTS meta"
+                    " (name TEXT PRIMARY KEY, doc TEXT)")
+        con.commit()
+
+    def _con(self) -> sqlite3.Connection:
+        if not hasattr(self._local, "con"):
+            self._local.con = sqlite3.connect(self.path)
+        return self._local.con
+
+    def put_chunk(self, key, data):
+        con = self._con()
+        cur = con.execute("INSERT OR IGNORE INTO chunks VALUES (?, ?)",
+                          (key, sqlite3.Binary(data)))
+        con.commit()
+        return cur.rowcount > 0
+
+    def get_chunk(self, key):
+        row = self._con().execute(
+            "SELECT data FROM chunks WHERE key=?", (key,)).fetchone()
+        if row is None:
+            raise ChunkMissingError(key)
+        return bytes(row[0])
+
+    def has_chunk(self, key):
+        return self._con().execute(
+            "SELECT 1 FROM chunks WHERE key=?", (key,)).fetchone() is not None
+
+    def delete_chunk(self, key):
+        con = self._con()
+        con.execute("DELETE FROM chunks WHERE key=?", (key,))
+        con.commit()
+
+    def put_meta(self, name, doc):
+        con = self._con()
+        con.execute("INSERT OR REPLACE INTO meta VALUES (?, ?)",
+                    (name, json.dumps(doc)))
+        con.commit()
+
+    def get_meta(self, name):
+        row = self._con().execute(
+            "SELECT doc FROM meta WHERE name=?", (name,)).fetchone()
+        return json.loads(row[0]) if row else None
+
+    def list_meta(self, prefix):
+        rows = self._con().execute(
+            "SELECT name FROM meta WHERE name LIKE ?", (prefix + "%",))
+        return sorted(r[0] for r in rows)
+
+    def chunk_bytes_total(self):
+        row = self._con().execute(
+            "SELECT COALESCE(SUM(LENGTH(data)),0) FROM chunks").fetchone()
+        return int(row[0])
+
+    def n_chunks(self):
+        return int(self._con().execute(
+            "SELECT COUNT(*) FROM chunks").fetchone()[0])
+
+
+# ---------------------------------------------------------------------------
+# fault injection
+# ---------------------------------------------------------------------------
+
+class FaultInjectedStore(ChunkStore):
+    """Wrapper that drops/corrupts selected chunks and can delay writes.
+
+    ``fail_get``: predicate(key) -> bool — raise ChunkMissingError on read.
+    ``write_delay``: seconds added per put (straggler simulation).
+    """
+
+    def __init__(self, inner: ChunkStore, *, fail_get=None, fail_put=None,
+                 write_delay: float = 0.0):
+        self.inner = inner
+        self.fail_get = fail_get or (lambda k: False)
+        self.fail_put = fail_put or (lambda k: False)
+        self.write_delay = write_delay
+        self.dropped_puts: List[str] = []
+
+    def put_chunk(self, key, data):
+        if self.write_delay:
+            time.sleep(self.write_delay)
+        if self.fail_put(key):
+            self.dropped_puts.append(key)
+            return False
+        return self.inner.put_chunk(key, data)
+
+    def get_chunk(self, key):
+        if self.fail_get(key):
+            raise ChunkMissingError(f"injected failure: {key}")
+        return self.inner.get_chunk(key)
+
+    def has_chunk(self, key):
+        return self.inner.has_chunk(key)
+
+    def delete_chunk(self, key):
+        self.inner.delete_chunk(key)
+
+    def put_meta(self, name, doc):
+        self.inner.put_meta(name, doc)
+
+    def get_meta(self, name):
+        return self.inner.get_meta(name)
+
+    def list_meta(self, prefix):
+        return self.inner.list_meta(prefix)
+
+    def chunk_bytes_total(self):
+        return self.inner.chunk_bytes_total()
+
+    def n_chunks(self):
+        return self.inner.n_chunks()
+
+
+def open_store(uri: str) -> ChunkStore:
+    """"memory://", "dir:///path", "sqlite:///path.db" or a bare path."""
+    if uri == "memory://" or uri == ":memory:":
+        return MemoryStore()
+    if uri.startswith("sqlite://"):
+        return SQLiteStore(uri[len("sqlite://"):])
+    if uri.startswith("dir://"):
+        return DirectoryStore(uri[len("dir://"):])
+    return DirectoryStore(uri)

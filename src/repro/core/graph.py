@@ -1,0 +1,211 @@
+"""Checkpoint Graph — branch-based state versioning (§5.1–5.2, Defs 4–6).
+
+A directed tree of commits.  Each node stores:
+  - the *state delta*: manifests for co-variables updated by the command
+  - the command spec (name/args/seed) — the "cell code" for fallback replay
+  - the versioned co-variables the command *accessed* (its dependencies)
+  - a snapshot of the full session-state index {co-variable -> version}
+    (footnote 5 of the paper), making Def-5 resolution O(1) and checkout
+    divergence (Def 6) a single index comparison.
+
+The explicit LCA method (`identical_via_lca`) implements Def 6 literally and
+is cross-checked against the index diff in property tests.
+"""
+from __future__ import annotations
+
+import json
+import time
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+from repro.core.chunkstore import ChunkStore
+from repro.core.covariable import CovKey
+
+KEY_SEP = "\x1f"
+
+
+def key_str(key: CovKey) -> str:
+    return KEY_SEP.join(key)
+
+
+def parse_key(s: str) -> CovKey:
+    return tuple(s.split(KEY_SEP))
+
+
+@dataclass
+class CommitNode:
+    commit_id: str
+    parent: Optional[str]
+    depth: int
+    timestamp: float
+    command: dict                      # {"name", "args"} — the "cell code"
+    manifests: Dict[str, dict]         # key_str -> manifest (the delta)
+    deleted: List[str]                 # key_strs removed by this command
+    accessed: Dict[str, str]           # key_str -> version (dependencies)
+    state_index: Dict[str, str]        # key_str -> version (Def 5 snapshot)
+    message: str = ""
+    stats: dict = field(default_factory=dict)
+
+    def to_doc(self) -> dict:
+        return {
+            "commit_id": self.commit_id, "parent": self.parent,
+            "depth": self.depth, "timestamp": self.timestamp,
+            "command": self.command, "manifests": self.manifests,
+            "deleted": self.deleted, "accessed": self.accessed,
+            "state_index": self.state_index, "message": self.message,
+            "stats": self.stats,
+        }
+
+    @classmethod
+    def from_doc(cls, doc: dict) -> "CommitNode":
+        return cls(**doc)
+
+
+@dataclass
+class CheckoutPlan:
+    to_load: Dict[CovKey, str]         # cov -> version to load
+    to_delete: List[CovKey]
+    identical: List[CovKey]
+
+    @property
+    def n_diverged(self) -> int:
+        return len(self.to_load)
+
+
+class CheckpointGraph:
+    def __init__(self, store: ChunkStore):
+        self.store = store
+        self.nodes: Dict[str, CommitNode] = {}
+        self.children: Dict[str, List[str]] = {}
+        self.head: Optional[str] = None
+        self._seq = 0
+        self._load()
+
+    # ------------------------------------------------------------------
+    # persistence
+    # ------------------------------------------------------------------
+    def _load(self) -> None:
+        for name in self.store.list_meta("commit/"):
+            doc = self.store.get_meta(name)
+            node = CommitNode.from_doc(doc)
+            self.nodes[node.commit_id] = node
+        for node in self.nodes.values():
+            if node.parent is not None:
+                self.children.setdefault(node.parent, []).append(node.commit_id)
+        head_doc = self.store.get_meta("HEAD")
+        if head_doc:
+            self.head = head_doc["head"]
+            self._seq = head_doc["seq"]
+
+    def _persist(self, node: CommitNode) -> None:
+        self.store.put_meta(f"commit/{node.commit_id}", node.to_doc())
+        self.store.put_meta("HEAD", {"head": self.head, "seq": self._seq})
+
+    # ------------------------------------------------------------------
+    # commits
+    # ------------------------------------------------------------------
+    def init_root(self) -> CommitNode:
+        assert not self.nodes, "graph already initialized"
+        root = CommitNode(
+            commit_id="c00000", parent=None, depth=0, timestamp=time.time(),
+            command={"name": "__init__", "args": {}}, manifests={},
+            deleted=[], accessed={}, state_index={}, message="session start")
+        self.nodes[root.commit_id] = root
+        self.head = root.commit_id
+        self._seq = 1
+        self._persist(root)
+        return root
+
+    def commit(self, *, command: dict, manifests: Dict[str, dict],
+               deleted_keys: List[CovKey], accessed: Dict[CovKey, str],
+               updated_keys: List[CovKey], message: str = "",
+               stats: Optional[dict] = None) -> CommitNode:
+        assert self.head is not None
+        parent = self.nodes[self.head]
+        cid = f"c{self._seq:05d}"
+        self._seq += 1
+
+        index = dict(parent.state_index)
+        for k in deleted_keys:
+            index.pop(key_str(k), None)
+        for k in updated_keys:
+            index[key_str(k)] = cid
+
+        node = CommitNode(
+            commit_id=cid, parent=parent.commit_id, depth=parent.depth + 1,
+            timestamp=time.time(), command=command, manifests=manifests,
+            deleted=[key_str(k) for k in deleted_keys],
+            accessed={key_str(k): v for k, v in accessed.items()},
+            state_index=index, message=message, stats=stats or {})
+        self.nodes[cid] = node
+        self.children.setdefault(parent.commit_id, []).append(cid)
+        self.head = cid
+        self._persist(node)
+        return node
+
+    def set_head(self, commit_id: str) -> None:
+        assert commit_id in self.nodes, commit_id
+        self.head = commit_id
+        self.store.put_meta("HEAD", {"head": self.head, "seq": self._seq})
+
+    # ------------------------------------------------------------------
+    # queries
+    # ------------------------------------------------------------------
+    def lca(self, a: str, b: str) -> str:
+        na, nb = self.nodes[a], self.nodes[b]
+        while na.depth > nb.depth:
+            na = self.nodes[na.parent]
+        while nb.depth > na.depth:
+            nb = self.nodes[nb.parent]
+        while na.commit_id != nb.commit_id:
+            na, nb = self.nodes[na.parent], self.nodes[nb.parent]
+        return na.commit_id
+
+    def state_index(self, t: str) -> Dict[str, str]:
+        return self.nodes[t].state_index
+
+    def identical_via_lca(self, key: CovKey, ta: str, tb: str) -> bool:
+        """Def 6, literally: X identical between states ta and tb iff a single
+        versioned co-variable (X, tc) is in the states of ta, tb and their LCA."""
+        ks = key_str(key)
+        tc = self.lca(ta, tb)
+        va = self.nodes[ta].state_index.get(ks)
+        vb = self.nodes[tb].state_index.get(ks)
+        vc = self.nodes[tc].state_index.get(ks)
+        return va is not None and va == vb == vc
+
+    def diff(self, cur: str, tgt: str) -> CheckoutPlan:
+        """Divergence between two states via index comparison (== Def 6)."""
+        ci = self.nodes[cur].state_index
+        ti = self.nodes[tgt].state_index
+        to_load = {parse_key(k): v for k, v in ti.items() if ci.get(k) != v}
+        to_delete = [parse_key(k) for k in ci if k not in ti]
+        identical = [parse_key(k) for k, v in ci.items() if ti.get(k) == v]
+        return CheckoutPlan(to_load=to_load, to_delete=to_delete,
+                            identical=identical)
+
+    def manifest_of(self, key: CovKey, version: str) -> Optional[dict]:
+        return self.nodes[version].manifests.get(key_str(key))
+
+    def log(self, limit: int = 0) -> List[dict]:
+        out = []
+        for cid in sorted(self.nodes):
+            n = self.nodes[cid]
+            out.append({"commit": cid, "parent": n.parent,
+                        "command": n.command.get("name"),
+                        "message": n.message,
+                        "updated": len(n.manifests),
+                        "deleted": len(n.deleted),
+                        "head": cid == self.head})
+        return out[-limit:] if limit else out
+
+    def path_from_root(self, t: str) -> List[str]:
+        out = []
+        node = self.nodes[t]
+        while node is not None:
+            out.append(node.commit_id)
+            node = self.nodes[node.parent] if node.parent else None
+        return out[::-1]
+
+    def total_meta_bytes(self) -> int:
+        return sum(len(json.dumps(n.to_doc())) for n in self.nodes.values())

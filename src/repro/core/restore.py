@@ -1,0 +1,90 @@
+"""Fallback recomputation — the Data Restorer (§5.3).
+
+A versioned co-variable (X, t) that was never stored (unserializable) or
+fails to load (missing/corrupt chunks) is reconstructed by
+  1. loading the versioned co-variables the commit *accessed* (its recorded
+     dependencies) into a temporary namespace — recursively restoring any of
+     *those* that are themselves missing (dynamic & recursive fallback), and
+  2. re-running the recorded command on that namespace.
+
+Determinism comes from the substrate: commands draw randomness from RNG-key
+leaves *inside* the namespace and data from versioned iterator state, so a
+replay sees bit-identical inputs (the paper's caveat about non-deterministic
+cells — §5.3 Remark — is discharged by construction here; cf. DESIGN.md §2).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Dict, Optional
+
+from repro.core.covariable import CovKey, group_covariables, RecordBuilder
+from repro.core.graph import CheckpointGraph, parse_key
+from repro.core.namespace import Namespace, TrackedNamespace
+from repro.core.serialize import ChunkMissingError
+
+
+class RestoreError(Exception):
+    pass
+
+
+class DataRestorer:
+    def __init__(self, graph: CheckpointGraph, loader,
+                 registry: Dict[str, Callable], *, max_depth: int = 64):
+        self.graph = graph
+        self.loader = loader            # StateLoader (for dependency loads)
+        self.registry = registry
+        self.max_depth = max_depth
+        self.replays = 0
+        # per-checkout replay memo: version -> replayed namespace. Restoring
+        # several co-variables of the same commit (or a chain of
+        # det-replay commits) re-runs each command once, not once per
+        # co-variable — the ARIES-style redo-caching the paper defers to
+        # future work (§7.5.2).
+        self._memo: Dict[str, Namespace] = {}
+
+    def clear_memo(self) -> None:
+        self._memo.clear()
+
+    def recompute(self, key: CovKey, version: str, stats=None,
+                  _depth: int = 0) -> Dict[str, Any]:
+        if _depth > self.max_depth:
+            raise RestoreError(f"recursion limit restoring {key} @ {version}")
+        node = self.graph.nodes[version]
+        cmd = node.command
+        if cmd["name"] == "__init__":
+            raise RestoreError(f"cannot recompute {key}: created at root")
+        fn = self.registry.get(cmd["name"])
+        if fn is None:
+            raise RestoreError(f"command {cmd['name']!r} not registered")
+
+        if version in self._memo:
+            temp = self._memo[version]
+            missing = [n for n in key if n not in temp]
+            if not missing:
+                return {n: temp[n] for n in key}
+
+        # 1. restore dependencies (recursively if needed)
+        temp = Namespace()
+        for dep_str, dep_version in node.accessed.items():
+            dep_key = parse_key(dep_str)
+            try:
+                values = self.loader.load_cov(dep_key, dep_version, stats)
+            except (ChunkMissingError, RestoreError):
+                values = self.recompute(dep_key, dep_version, stats,
+                                        _depth + 1)
+            for name, val in values.items():
+                temp[name] = val
+
+        # 2. re-run the recorded command
+        tns = TrackedNamespace(temp)
+        fn(tns, **cmd.get("args", {}))
+        self.replays += 1
+        self._memo[version] = temp
+
+        # 3. extract the requested co-variable (membership may be verified
+        #    against the recomputed aliasing)
+        missing = [n for n in key if n not in temp]
+        if missing:
+            raise RestoreError(
+                f"replay of {cmd['name']} did not produce {missing}")
+        return {n: temp[n] for n in key}

@@ -1,0 +1,251 @@
+"""KishuSession — the public time-traveling API (§3).
+
+    session = KishuSession(store)
+    session.register("train", train_command)
+    session.init_state({...})                 # attach
+    session.run("train", steps=10)            # cell execution + incr. ckpt
+    session.log()                             # inspect the Checkpoint Graph
+    session.checkout("c00003")                # incremental checkout (undo /
+                                              #  branch switch)
+
+Each ``run`` executes a registered command against the tracked namespace,
+detects the co-variable-granularity state delta (Lemma-1-pruned), writes an
+incremental checkpoint, and appends a commit to the Checkpoint Graph.
+``checkout`` restores any past state by loading only diverged co-variables,
+with recursive fallback recomputation for missing data.
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.core import hashing
+from repro.core.checkpoint import CheckpointWriter, WriteStats
+from repro.core.checkout import CheckoutStats, StateLoader
+from repro.core.chunkstore import ChunkStore
+from repro.core.covariable import (CovKey, RecordBuilder, StateDelta,
+                                   detect_delta, group_covariables)
+from repro.core.graph import CheckpointGraph, key_str
+from repro.core.namespace import Namespace, TrackedNamespace
+from repro.core.restore import DataRestorer
+
+
+@dataclass
+class RunStats:
+    commit_id: str = ""
+    exec_s: float = 0.0
+    detect_s: float = 0.0
+    write_s: float = 0.0
+    total_s: float = 0.0
+    covs_updated: int = 0
+    covs_deleted: int = 0
+    covs_checked: int = 0
+    covs_skipped: int = 0
+    write: WriteStats = field(default_factory=WriteStats)
+
+
+class KishuSession:
+    def __init__(self, store: ChunkStore, *,
+                 chunk_bytes: int = hashing.DEFAULT_CHUNK_BYTES,
+                 async_write: bool = False,
+                 write_deadline_s: float = 0.0,
+                 check_all: bool = False,
+                 hasher=None):
+        self.store = store
+        self.ns = Namespace()
+        self.tracked = TrackedNamespace(self.ns)
+        self.graph = CheckpointGraph(store)
+        self.builder = RecordBuilder(chunk_bytes, hasher=hasher)
+        self.writer = CheckpointWriter(store, chunk_bytes=chunk_bytes,
+                                       async_write=async_write,
+                                       write_deadline_s=write_deadline_s)
+        self.registry: Dict[str, Callable] = {}
+        self.records: Dict[str, Any] = {}
+        self.covs: Dict[CovKey, List[str]] = {}
+        self.check_all = check_all      # AblatedKishu(Check all) mode (§7.6)
+        self.last_run: Optional[RunStats] = None
+        self.last_checkout: Optional[CheckoutStats] = None
+
+        self.loader = StateLoader(self.graph, store)
+        self.restorer = DataRestorer(self.graph, self.loader, self.registry)
+        self.loader.fallback = self.restorer.recompute
+
+        if not self.graph.nodes:
+            self.graph.init_root()
+
+    # ------------------------------------------------------------------
+    # attachment & commands
+    # ------------------------------------------------------------------
+    def register(self, name: str, fn: Callable) -> None:
+        self.registry[name] = fn
+
+    def init_state(self, tree: Dict[str, Any], message: str = "attach") -> str:
+        """Attach: populate the namespace and commit the initial state."""
+        def _init(ns, **_):
+            for prefix, sub in tree.items():
+                if isinstance(sub, dict):
+                    ns.set_tree(prefix, sub)
+                else:
+                    ns[prefix] = sub
+        self.register("__attach__", _init)
+        return self.run("__attach__", _message=message)
+
+    @property
+    def head(self) -> str:
+        return self.graph.head
+
+    # ------------------------------------------------------------------
+    # cell execution + incremental checkpoint
+    # ------------------------------------------------------------------
+    def run(self, command: str, _message: str = "", **args) -> str:
+        name = command
+        fn = self.registry[name]
+        stats = RunStats()
+        t_all = time.perf_counter()
+
+        self.tracked.reset()
+        t0 = time.perf_counter()
+        fn(self.tracked, **args)
+        stats.exec_s = time.perf_counter() - t0
+
+        accessed = (set(self.tracked.accessed) | set(self.tracked.written)
+                    | set(self.tracked.deleted))
+        if self.check_all:
+            accessed = set(self.records) | set(self.ns.names())
+
+        t0 = time.perf_counter()
+        delta, self.records = detect_delta(self.records, self.covs, self.ns,
+                                           accessed, self.builder)
+        self.covs = group_covariables(self.records)
+        stats.detect_s = time.perf_counter() - t0
+
+        # dependencies: accessed co-variables at their pre-execution versions
+        prev_index = self.graph.nodes[self.graph.head].state_index
+        deps = {}
+        for key in delta.candidates:
+            ver = prev_index.get(key_str(key))
+            if ver is not None:
+                deps[key] = ver
+
+        t0 = time.perf_counter()
+        manifests, wstats = self.writer.write_delta(
+            delta, self.ns, self._prev_manifest)
+        stats.write_s = time.perf_counter() - t0
+        stats.write = wstats
+
+        node = self.graph.commit(
+            command={"name": name, "args": args},
+            manifests=manifests,
+            deleted_keys=delta.deleted,
+            accessed=deps,
+            updated_keys=list(delta.updated),
+            message=_message,
+            stats={"bytes_written": wstats.bytes_written,
+                   "chunks_written": wstats.chunks_written,
+                   "exec_s": stats.exec_s})
+        stats.commit_id = node.commit_id
+        stats.covs_updated = len(delta.updated)
+        stats.covs_deleted = len(delta.deleted)
+        stats.covs_checked = delta.checked
+        stats.covs_skipped = delta.skipped
+        stats.total_s = time.perf_counter() - t_all
+        self.last_run = stats
+        return node.commit_id
+
+    def _prev_manifest(self, key: CovKey) -> Optional[dict]:
+        ver = self.graph.nodes[self.graph.head].state_index.get(key_str(key))
+        if ver is None:
+            return None
+        return self.graph.manifest_of(key, ver)
+
+    # ------------------------------------------------------------------
+    # incremental checkout
+    # ------------------------------------------------------------------
+    def checkout(self, commit_id: str) -> CheckoutStats:
+        self.writer.flush()
+        self.restorer.clear_memo()
+        self.records, stats = self.loader.checkout(self.tracked, self.records,
+                                                   commit_id)
+        self.covs = group_covariables(self.records)
+        self.last_checkout = stats
+        return stats
+
+    # ------------------------------------------------------------------
+    # introspection & maintenance
+    # ------------------------------------------------------------------
+    def log(self, limit: int = 0) -> List[dict]:
+        return self.graph.log(limit)
+
+    def diff(self, a: str, b: str) -> dict:
+        """Human-oriented state diff between two commits: which co-variables
+        diverged / exist only on one side (Def 6 over the graph index)."""
+        plan = self.graph.diff(a, b)
+        return {"diverged": sorted("+".join(k) for k in plan.to_load),
+                "only_in_a": sorted("+".join(k) for k in plan.to_delete),
+                "identical": len(plan.identical)}
+
+    def delete_branch(self, tip: str) -> List[str]:
+        """Delete the commits exclusive to ``tip``'s branch (up to but not
+        including the first ancestor with another child or the HEAD path).
+        Returns deleted commit ids. Run ``gc()`` afterwards to reclaim
+        chunks."""
+        assert tip != self.graph.head, "cannot delete the current branch"
+        doomed = []
+        node = self.graph.nodes[tip]
+        while node.parent is not None:
+            siblings = self.graph.children.get(node.parent, [])
+            doomed.append(node.commit_id)
+            if len(siblings) > 1 or node.parent == self.graph.head:
+                break
+            node = self.graph.nodes[node.parent]
+        head_path = set(self.graph.path_from_root(self.graph.head))
+        doomed = [c for c in doomed if c not in head_path]
+        for cid in doomed:
+            parent = self.graph.nodes[cid].parent
+            if parent in self.graph.children:
+                self.graph.children[parent] = [
+                    c for c in self.graph.children[parent] if c != cid]
+            del self.graph.nodes[cid]
+            self.store.put_meta(f"commit/{cid}", {"deleted": True})
+        return doomed
+
+    def gc(self) -> dict:
+        """Content-addressed garbage collection: drop chunks referenced by
+        no live manifest (after branch deletion / history truncation)."""
+        live = set()
+        for node in self.graph.nodes.values():
+            for man in node.manifests.values():
+                if man.get("unserializable"):
+                    continue
+                for c in man.get("base", {}).get("chunks", []):
+                    live.add(c["key"])
+        dropped = 0
+        freed = 0
+        # enumerate store chunks (backend-specific; MemoryStore/Directory)
+        keys = []
+        if hasattr(self.store, "chunks"):
+            keys = list(self.store.chunks)
+        elif hasattr(self.store, "root"):
+            import os as _os
+            cdir = _os.path.join(self.store.root, "chunks")
+            for d, _, files in _os.walk(cdir):
+                keys.extend(files)
+        for k in keys:
+            if k not in live:
+                if hasattr(self.store, "chunks"):
+                    freed += len(self.store.chunks.get(k, b""))
+                self.store.delete_chunk(k)
+                dropped += 1
+        return {"chunks_dropped": dropped, "bytes_freed": freed,
+                "chunks_live": len(live)}
+
+    def storage_stats(self) -> dict:
+        return {"chunk_bytes": self.store.chunk_bytes_total(),
+                "n_chunks": self.store.n_chunks(),
+                "graph_meta_bytes": self.graph.total_meta_bytes(),
+                "n_commits": len(self.graph.nodes)}
+
+    def close(self) -> None:
+        self.writer.flush()
+        self.writer.close()

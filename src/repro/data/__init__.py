@@ -1,0 +1,3 @@
+from repro.data.pipeline import DataState, TokenPipeline
+
+__all__ = ["DataState", "TokenPipeline"]

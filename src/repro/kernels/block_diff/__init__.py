@@ -1,0 +1,4 @@
+from repro.kernels.block_diff.ops import block_diff
+from repro.kernels.block_diff.ref import block_diff_ref
+
+__all__ = ["block_diff", "block_diff_ref"]

@@ -1,0 +1,41 @@
+"""jit'd public wrapper for exact per-chunk diffing of two same-shape arrays."""
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.block_diff.kernel import block_diff_pallas
+from repro.kernels.block_diff.ref import block_diff_ref
+from repro.kernels.chunk_hash.ops import _to_words
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("chunk_bytes", "backend", "interpret"))
+def block_diff(a: jax.Array, b: jax.Array, chunk_bytes: int = 1 << 18, *,
+               backend: Literal["pallas", "ref"] = "pallas",
+               interpret: bool = False) -> jax.Array:
+    """int32 [n_chunks]: 1 iff chunk i of a and b differ bitwise.
+
+    a and b must have identical shape/dtype (structure changes are detected
+    before content compare — covariable.py).
+    """
+    assert a.shape == b.shape and a.dtype == b.dtype, "structure mismatch"
+    assert chunk_bytes % 4 == 0 and chunk_bytes & (chunk_bytes - 1) == 0
+    nbytes_total = a.size * np.dtype(a.dtype).itemsize
+    wa, wb = _to_words(a), _to_words(b)
+    wpc = chunk_bytes // 4
+    n_chunks = max(-(-int(nbytes_total) // chunk_bytes), 1)
+    pad = n_chunks * wpc - wa.shape[0]
+    if pad:
+        zeros = jnp.zeros((pad,), jnp.uint32)
+        wa = jnp.concatenate([wa, zeros])
+        wb = jnp.concatenate([wb, zeros])
+    wa = wa.reshape(n_chunks, wpc)
+    wb = wb.reshape(n_chunks, wpc)
+    if backend == "pallas":
+        return block_diff_pallas(wa, wb, interpret=interpret)
+    return block_diff_ref(wa, wb)

@@ -1,0 +1,12 @@
+"""Pure-jnp oracle for the block-diff kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def block_diff_ref(a_words: jax.Array, b_words: jax.Array) -> jax.Array:
+    """a/b: uint32 [n_chunks, W]. Returns int32 [n_chunks]: 1 iff any word
+    differs in that chunk (exact bitwise compare)."""
+    neq = (a_words != b_words).astype(jnp.int32)
+    return jnp.max(neq, axis=1)

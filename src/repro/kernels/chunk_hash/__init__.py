@@ -1,0 +1,4 @@
+from repro.kernels.chunk_hash.ops import chunk_hash, chunk_hash_u64
+from repro.kernels.chunk_hash.ref import chunk_hash_ref
+
+__all__ = ["chunk_hash", "chunk_hash_u64", "chunk_hash_ref"]

@@ -1,0 +1,71 @@
+"""Pallas TPU kernel: per-chunk detection hash at HBM bandwidth.
+
+Grid: one program per chunk.  Each program streams one chunk of uint32 words
+HBM->VMEM (BlockSpec (1, W)), avalanche-mixes every word with its position
+(pure VPU ops: xor/mul/shift), XOR-tree-reduces, folds in the true byte
+length, and writes a (1, 2) uint32 hash pair.
+
+The XOR reduction is an unrolled log2(W) halving tree — no sequential
+dependency, unlike FNV — which is exactly why this hash was chosen for the
+TPU adaptation (DESIGN.md §4).  W must be a power of two; ops.py pads.
+
+VMEM budget: one (1, W) uint32 block = 4*W bytes; the default W=65536
+(256 KiB chunks) uses 256 KiB of VMEM plus negligible intermediates.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from repro.core.hashing import C1, C2, GOLDEN, SEEDS
+
+
+def _xor_tree(v: jax.Array) -> jax.Array:
+    """XOR-reduce v [1, W] -> scalar via an unrolled halving tree."""
+    length = v.shape[1]
+    while length > 1:
+        half = length // 2
+        v = v[:, :half] ^ v[:, half:length]
+        length = half
+    return v[0, 0]
+
+
+def _chunk_hash_kernel(words_ref, nbytes_ref, out_ref):
+    w = words_ref[...]                                   # (1, W) uint32
+    wsize = w.shape[1]
+    idx = jax.lax.broadcasted_iota(jnp.uint32, (1, wsize), 1)
+    nbytes = nbytes_ref[0, 0].astype(jnp.uint32)
+    n_valid = (nbytes + 3) // 4          # padding words contribute zero
+    for lane, seed in enumerate(SEEDS):
+        m = (w ^ (idx * jnp.uint32(GOLDEN) + jnp.uint32(seed))) * jnp.uint32(C1)
+        m = m ^ (m >> 16)
+        m = m * jnp.uint32(C2)
+        m = m ^ (m >> 13)
+        m = jnp.where(idx < n_valid, m, jnp.uint32(0))
+        h = _xor_tree(m)
+        h = (h ^ nbytes) * jnp.uint32(C1)
+        h = h ^ (h >> 16)
+        out_ref[0, lane] = h
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def chunk_hash_pallas(words: jax.Array, nbytes: jax.Array, *,
+                      interpret: bool = False) -> jax.Array:
+    """words: uint32 [n_chunks, W] (W power of two); nbytes: int32 [n_chunks].
+    Returns uint32 [n_chunks, 2]."""
+    n_chunks, wsize = words.shape
+    assert wsize & (wsize - 1) == 0, f"W={wsize} must be a power of two"
+    return pl.pallas_call(
+        _chunk_hash_kernel,
+        grid=(n_chunks,),
+        in_specs=[
+            pl.BlockSpec((1, wsize), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 2), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n_chunks, 2), jnp.uint32),
+        interpret=interpret,
+    )(words, nbytes.reshape(-1, 1))

@@ -1,0 +1,99 @@
+"""jit'd public wrapper for on-device chunk hashing.
+
+Handles arbitrary array dtypes/shapes: bitcasts to uint32 words (with
+zero-padding), reshapes into [n_chunks, W], dispatches to the Pallas kernel
+(TPU; interpret-mode on CPU) or the jnp oracle, and packs the two 32-bit
+lanes into uint64 detection hashes identical to
+``repro.core.hashing.chunk_hashes_np``.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Literal
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import hashing
+from repro.kernels.chunk_hash.kernel import chunk_hash_pallas
+from repro.kernels.chunk_hash.ref import chunk_hash_ref
+
+
+def _to_words(x: jax.Array) -> jax.Array:
+    """Flatten + bitcast any-dtype array to uint32 words (little-endian)."""
+    flat = x.reshape(-1)
+    item = np.dtype(x.dtype).itemsize
+    if item == 4:
+        return jax.lax.bitcast_convert_type(flat, jnp.uint32)
+    if item == 8:
+        w = jax.lax.bitcast_convert_type(flat, jnp.uint32)   # [..., 2]
+        return w.reshape(-1)
+    if item == 2:
+        u = jax.lax.bitcast_convert_type(flat, jnp.uint16).astype(jnp.uint32)
+        if u.shape[0] % 2:
+            u = jnp.concatenate([u, jnp.zeros((1,), jnp.uint32)])
+        u = u.reshape(-1, 2)
+        return u[:, 0] | (u[:, 1] << 16)
+    if item == 1:
+        u = jax.lax.bitcast_convert_type(flat, jnp.uint8).astype(jnp.uint32)
+        pad = (-u.shape[0]) % 4
+        if pad:
+            u = jnp.concatenate([u, jnp.zeros((pad,), jnp.uint32)])
+        u = u.reshape(-1, 4)
+        return u[:, 0] | (u[:, 1] << 8) | (u[:, 2] << 16) | (u[:, 3] << 24)
+    raise TypeError(f"unsupported itemsize {item} for dtype {x.dtype}")
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("chunk_bytes", "backend", "interpret"))
+def chunk_hash(x: jax.Array, chunk_bytes: int = 1 << 18, *,
+               backend: Literal["pallas", "ref"] = "pallas",
+               interpret: bool = False) -> jax.Array:
+    """Per-chunk detection hashes of an on-device array.
+
+    Returns uint32 [n_chunks, 2].  ``chunk_bytes`` must be a power of two
+    multiple of 4.
+    """
+    assert chunk_bytes % 4 == 0 and chunk_bytes & (chunk_bytes - 1) == 0
+    nbytes_total = x.size * np.dtype(x.dtype).itemsize
+    words = _to_words(x)
+    wpc = chunk_bytes // 4
+    n_chunks = max(-(-int(nbytes_total) // chunk_bytes), 1)
+    pad = n_chunks * wpc - words.shape[0]
+    if pad:
+        words = jnp.concatenate([words, jnp.zeros((pad,), jnp.uint32)])
+    words = words.reshape(n_chunks, wpc)
+    # per-chunk true byte counts (host math in int64: sizes can exceed int32)
+    nbytes = jnp.asarray(np.minimum(
+        np.full(n_chunks, chunk_bytes, np.int64),
+        np.maximum(int(nbytes_total)
+                   - np.arange(n_chunks, dtype=np.int64) * chunk_bytes, 0)
+    ).astype(np.int32))
+    if backend == "pallas":
+        return chunk_hash_pallas(words, nbytes, interpret=interpret)
+    return chunk_hash_ref(words, nbytes)
+
+
+def chunk_hash_u64(x, chunk_bytes: int = 1 << 18, *,
+                   backend: str = "pallas", interpret: bool = False
+                   ) -> np.ndarray:
+    """Host-side convenience: uint64 [n_chunks], matching chunk_hashes_np."""
+    lanes = np.asarray(chunk_hash(x, chunk_bytes, backend=backend,
+                                  interpret=interpret))
+    return hashing.combine_u64(lanes)
+
+
+def device_hasher(chunk_bytes: int = 1 << 18, *, backend: str = "pallas",
+                  interpret: bool = False):
+    """Adapter for RecordBuilder(hasher=...): on-device detection hashing.
+
+    Accepts the bytes/uint8-view the builder passes and returns uint64
+    [n_chunks] — the TPU path for delta detection.
+    """
+    def _hash(buf, cb=None):
+        arr = np.frombuffer(buf, dtype=np.uint8) if isinstance(
+            buf, (bytes, bytearray, memoryview)) else np.asarray(buf)
+        return chunk_hash_u64(jnp.asarray(arr), cb or chunk_bytes,
+                              backend=backend, interpret=interpret)
+    return _hash

@@ -1,0 +1,17 @@
+"""Pure-jnp oracle for the chunk-hash kernel.
+
+Delegates to the canonical spec in ``repro.core.hashing`` so the Pallas
+kernel, this oracle, and the host NumPy path are provably the same function
+(tested bit-for-bit in tests/test_kernels_chunk_hash.py).
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.core.hashing import chunk_hashes_jnp
+
+
+def chunk_hash_ref(words: jax.Array, nbytes: jax.Array) -> jax.Array:
+    """words: uint32 [n_chunks, W]; nbytes: int32 [n_chunks]
+    -> uint32 [n_chunks, 2]."""
+    return chunk_hashes_jnp(words, nbytes)

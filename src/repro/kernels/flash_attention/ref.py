@@ -1,0 +1,23 @@
+"""Pure-jnp oracle for the flash-attention kernel (naive softmax attention)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def flash_attention_ref(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                        causal: bool = True) -> jax.Array:
+    """q,k,v: [B,S,H,hd] (same H — GQA broadcast happens in ops.py).
+    Returns [B,S,H,hd], float32 accumulation, output in q.dtype."""
+    scale = 1.0 / np.sqrt(q.shape[-1])
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if causal:
+        s = q.shape[1]
+        mask = jnp.tril(jnp.ones((s, s), bool))
+        logits = jnp.where(mask[None, None], logits, -jnp.inf)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs.astype(jnp.float32),
+                     v.astype(jnp.float32))
+    return out.astype(q.dtype)

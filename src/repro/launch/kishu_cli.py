@@ -1,0 +1,175 @@
+"""kishu CLI — inspect and maintain a checkpoint store from the shell.
+
+    python -m repro.launch.kishu_cli --store dir:///ckpt log
+    python -m repro.launch.kishu_cli --store ... show c00042
+    python -m repro.launch.kishu_cli --store ... diff c00012 c00042
+    python -m repro.launch.kishu_cli --store ... stats
+    python -m repro.launch.kishu_cli --store ... verify [--commit cXXXXX]
+    python -m repro.launch.kishu_cli --store ... gc
+
+``verify`` checks that every chunk referenced by a state's manifests is
+present and content-addressed correctly — the operator's answer to "can I
+still restore this run?" after storage incidents (missing chunks are
+reported per co-variable; they will restore via fallback recomputation as
+long as the command registry is available).
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import Optional
+
+from repro.core.chunkstore import chunk_key, open_store
+from repro.core.graph import CheckpointGraph, parse_key
+
+
+def cmd_log(graph: CheckpointGraph, args) -> int:
+    for e in graph.log(limit=args.limit):
+        mark = "*" if e["head"] else " "
+        print(f"{mark} {e['commit']}  <- {e['parent'] or '-':8s} "
+              f"{e['command'] or '':14s} upd={e['updated']:3d} "
+              f"del={e['deleted']:2d}  {e['message']}")
+    return 0
+
+
+def cmd_show(graph: CheckpointGraph, args) -> int:
+    node = graph.nodes.get(args.commit)
+    if node is None:
+        print(f"no such commit: {args.commit}", file=sys.stderr)
+        return 1
+    print(f"commit  {node.commit_id} (parent {node.parent}, "
+          f"depth {node.depth})")
+    print(f"command {node.command}")
+    print(f"message {node.message!r}")
+    print(f"state   {len(node.state_index)} co-variables")
+    for ks, man in sorted(node.manifests.items()):
+        names = "+".join(parse_key(ks))
+        if man.get("unserializable"):
+            print(f"  upd {names:42s} UNSERIALIZABLE (fallback recompute)")
+        else:
+            b = man["base"]
+            print(f"  upd {names:42s} {b['nbytes']:>12,d} B "
+                  f"{len(b['chunks'])} chunks")
+    for ks in node.deleted:
+        print(f"  del {'+'.join(parse_key(ks))}")
+    return 0
+
+
+def cmd_diff(graph: CheckpointGraph, args) -> int:
+    for c in (args.a, args.b):
+        if c not in graph.nodes:
+            print(f"no such commit: {c}", file=sys.stderr)
+            return 1
+    plan = graph.diff(args.a, args.b)
+    print(f"{args.a} -> {args.b}: {plan.n_diverged} diverged, "
+          f"{len(plan.to_delete)} only-in-{args.a}, "
+          f"{len(plan.identical)} identical")
+    for key, ver in sorted(plan.to_load.items()):
+        print(f"  ~ {'+'.join(key):42s} @ {ver}")
+    for key in plan.to_delete:
+        print(f"  - {'+'.join(key)}")
+    return 0
+
+
+def cmd_stats(store, graph: CheckpointGraph, args) -> int:
+    print(f"commits      {len(graph.nodes)}")
+    print(f"head         {graph.head}")
+    print(f"chunks       {store.n_chunks()}")
+    print(f"chunk bytes  {store.chunk_bytes_total():,d}")
+    print(f"graph bytes  {graph.total_meta_bytes():,d}")
+    return 0
+
+
+def cmd_verify(store, graph: CheckpointGraph, args) -> int:
+    commits = [args.commit] if args.commit else sorted(graph.nodes)
+    bad = 0
+    for cid in commits:
+        node = graph.nodes.get(cid)
+        if node is None:
+            print(f"no such commit: {cid}", file=sys.stderr)
+            return 1
+        for ks, man in node.manifests.items():
+            if man.get("unserializable"):
+                continue
+            names = "+".join(parse_key(ks))
+            for c in man["base"]["chunks"]:
+                if not store.has_chunk(c["key"]):
+                    print(f"MISSING {cid} {names} chunk {c['key']}")
+                    bad += 1
+                elif args.deep:
+                    data = store.get_chunk(c["key"])
+                    if chunk_key(data) != c["key"] or len(data) != c["n"]:
+                        print(f"CORRUPT {cid} {names} chunk {c['key']}")
+                        bad += 1
+    print(f"verify: {'OK' if bad == 0 else f'{bad} problems'} "
+          f"({len(commits)} commits)")
+    return 0 if bad == 0 else 2
+
+
+def cmd_gc(store, graph: CheckpointGraph, args) -> int:
+    # session-less GC: same live-set logic as KishuSession.gc()
+    live = set()
+    for node in graph.nodes.values():
+        for man in node.manifests.values():
+            if man.get("unserializable"):
+                continue
+            for c in man.get("base", {}).get("chunks", []):
+                live.add(c["key"])
+    keys = []
+    if hasattr(store, "chunks"):
+        keys = list(store.chunks)
+    elif hasattr(store, "root"):
+        import os
+        cdir = os.path.join(store.root, "chunks")
+        for d, _, files in os.walk(cdir):
+            keys.extend(files)
+    dropped = 0
+    for k in keys:
+        if k not in live:
+            if not args.dry_run:
+                store.delete_chunk(k)
+            dropped += 1
+    print(f"gc: {'would drop' if args.dry_run else 'dropped'} {dropped} "
+          f"chunks ({len(live)} live)")
+    return 0
+
+
+def main(argv: Optional[list] = None) -> int:
+    ap = argparse.ArgumentParser(prog="kishu")
+    ap.add_argument("--store", required=True,
+                    help="memory:// | dir:///path | sqlite:///db")
+    sub = ap.add_subparsers(dest="cmd", required=True)
+    p = sub.add_parser("log")
+    p.add_argument("--limit", type=int, default=0)
+    p = sub.add_parser("show")
+    p.add_argument("commit")
+    p = sub.add_parser("diff")
+    p.add_argument("a")
+    p.add_argument("b")
+    sub.add_parser("stats")
+    p = sub.add_parser("verify")
+    p.add_argument("--commit")
+    p.add_argument("--deep", action="store_true")
+    p = sub.add_parser("gc")
+    p.add_argument("--dry-run", action="store_true")
+    args = ap.parse_args(argv)
+
+    store = open_store(args.store)
+    graph = CheckpointGraph(store)
+    if args.cmd == "log":
+        return cmd_log(graph, args)
+    if args.cmd == "show":
+        return cmd_show(graph, args)
+    if args.cmd == "diff":
+        return cmd_diff(graph, args)
+    if args.cmd == "stats":
+        return cmd_stats(store, graph, args)
+    if args.cmd == "verify":
+        return cmd_verify(store, graph, args)
+    if args.cmd == "gc":
+        return cmd_gc(store, graph, args)
+    return 1
+
+
+if __name__ == "__main__":
+    sys.exit(main())

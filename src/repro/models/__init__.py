@@ -1,0 +1,5 @@
+from repro.models.config import (ArchConfig, MLAConfig, MoEConfig, SSMConfig,
+                                 get_config, list_configs, register)
+
+__all__ = ["ArchConfig", "MLAConfig", "MoEConfig", "SSMConfig", "get_config",
+           "list_configs", "register"]

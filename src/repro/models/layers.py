@@ -1,0 +1,357 @@
+"""Core neural layers: norms, RoPE (standard + M-RoPE), GQA and MLA attention,
+gated MLP. Pure-functional JAX; parameters are plain nested dicts of arrays.
+
+Conventions
+-----------
+- activations: [batch, seq, d_model] unless noted
+- attention tensors: [batch, seq, heads, head_dim]
+- all matmuls accumulate in float32 (``preferred_element_type``), outputs cast
+  back to the activation dtype.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models.config import ArchConfig, MLAConfig
+
+Array = jax.Array
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+def _dense_init(key, shape, in_axis_size, dtype):
+    scale = 1.0 / np.sqrt(max(in_axis_size, 1))
+    return (jax.random.uniform(key, shape, jnp.float32, -scale, scale)
+            .astype(dtype))
+
+
+def dense_param(key, d_in: int, d_out, dtype) -> Array:
+    shape = (d_in, d_out) if isinstance(d_out, int) else (d_in, *d_out)
+    return _dense_init(key, shape, d_in, dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype) -> dict:
+    return {"scale": jnp.ones((d,), dtype=dtype)}
+
+
+def rmsnorm(params: dict, x: Array, eps: float = 1e-5) -> Array:
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(jnp.square(xf), axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# RoPE
+# ---------------------------------------------------------------------------
+
+def rope_frequencies(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float64)
+                            / head_dim))
+
+
+def apply_rope(x: Array, positions: Array, theta: float) -> Array:
+    """Standard rotary embedding. x: [B,S,H,hd]; positions: [B,S] (int32)."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_frequencies(hd, theta), dtype=jnp.float32)
+    ang = positions[..., None].astype(jnp.float32) * freqs        # [B,S,hd/2]
+    cos = jnp.cos(ang)[:, :, None, :]                             # [B,S,1,hd/2]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def apply_mrope(x: Array, positions_thw: Array, theta: float,
+                sections: Tuple[int, int, int]) -> Array:
+    """Multimodal RoPE (Qwen2-VL): the head_dim/2 frequency bands are split
+    into (t,h,w) sections, each rotated by its own position id.
+
+    x: [B,S,H,hd]; positions_thw: [B,S,3] int32; sections sum to hd//2.
+    """
+    hd = x.shape[-1]
+    assert sum(sections) == hd // 2, (sections, hd)
+    freqs = jnp.asarray(rope_frequencies(hd, theta), dtype=jnp.float32)
+    # pick the position id per frequency band
+    sect_id = jnp.asarray(
+        np.repeat(np.arange(3), np.asarray(sections)), dtype=jnp.int32)  # [hd/2]
+    pos = jnp.take_along_axis(
+        positions_thw.astype(jnp.float32),
+        jnp.broadcast_to(sect_id[None, None, :],
+                         (*positions_thw.shape[:2], hd // 2)),
+        axis=-1)                                                  # [B,S,hd/2]
+    ang = pos * freqs
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def sinusoidal_positions(seq: int, d: int) -> np.ndarray:
+    """Whisper-style fixed sinusoidal embeddings [seq, d]."""
+    pos = np.arange(seq)[:, None]
+    inv = 1.0 / (10_000 ** (np.arange(0, d, 2) / d))
+    ang = pos * inv[None, :]
+    out = np.zeros((seq, d), dtype=np.float32)
+    out[:, 0::2] = np.sin(ang)
+    out[:, 1::2] = np.cos(ang)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# attention core
+# ---------------------------------------------------------------------------
+
+def _repeat_kv(k: Array, n_rep: int) -> Array:
+    """[B,S,Hkv,hd] -> [B,S,Hkv*n_rep,hd] by head-group broadcast."""
+    if n_rep == 1:
+        return k
+    b, s, h, d = k.shape
+    return jnp.broadcast_to(k[:, :, :, None, :], (b, s, h, n_rep, d)) \
+              .reshape(b, s, h * n_rep, d)
+
+
+def attention_core(q: Array, k: Array, v: Array, *, causal: bool,
+                   q_offset: Array | int = 0,
+                   softmax_scale: Optional[float] = None) -> Array:
+    """Scaled dot-product attention with GQA broadcast.
+
+    q: [B,Sq,Hq,hd]  k,v: [B,Skv,Hkv,hd(v)]  -> [B,Sq,Hq,hd_v]
+    ``q_offset``: absolute position of q[0] (for decode: Skv_filled).
+    """
+    bq, sq, hq, hd = q.shape
+    hkv = k.shape[2]
+    n_rep = hq // hkv
+    k = _repeat_kv(k, n_rep)
+    v = _repeat_kv(v, n_rep)
+    scale = softmax_scale if softmax_scale is not None else 1.0 / np.sqrt(hd)
+    logits = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                        preferred_element_type=jnp.float32) * scale
+    if causal:
+        qpos = jnp.arange(sq)[:, None] + q_offset
+        kpos = jnp.arange(k.shape[1])[None, :]
+        mask = qpos >= kpos
+        logits = jnp.where(mask[None, None], logits, jnp.float32(-1e30))
+    probs = jax.nn.softmax(logits, axis=-1).astype(v.dtype)
+    out = jnp.einsum("bhqk,bkhd->bqhd", probs, v,
+                     preferred_element_type=jnp.float32)
+    return out.astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA attention block
+# ---------------------------------------------------------------------------
+
+def gqa_init(key, cfg: ArchConfig, dtype) -> dict:
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_param(ks[0], d, (cfg.n_heads, hd), dtype),
+        "wk": dense_param(ks[1], d, (cfg.n_kv_heads, hd), dtype),
+        "wv": dense_param(ks[2], d, (cfg.n_kv_heads, hd), dtype),
+        "wo": _dense_init(ks[3], (cfg.n_heads, hd, d), cfg.n_heads * hd, dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = rmsnorm_init(hd, dtype)
+        p["k_norm"] = rmsnorm_init(hd, dtype)
+    return p
+
+
+def _project_qkv(p: dict, cfg: ArchConfig, x: Array, positions) -> Tuple[Array, Array, Array]:
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    k = jnp.einsum("bsd,dhk->bshk", x, p["wk"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    v = jnp.einsum("bsd,dhk->bshk", x, p["wv"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    if cfg.qk_norm:
+        q = rmsnorm(p["q_norm"], q, cfg.norm_eps)
+        k = rmsnorm(p["k_norm"], k, cfg.norm_eps)
+    if cfg.rope_type == "standard":
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+    elif cfg.rope_type == "mrope":
+        q = apply_mrope(q, positions, cfg.rope_theta, cfg.mrope_sections)
+        k = apply_mrope(k, positions, cfg.rope_theta, cfg.mrope_sections)
+    return q, k, v
+
+
+def gqa_forward(p: dict, cfg: ArchConfig, x: Array, positions,
+                *, causal: bool = True) -> Array:
+    """Full self-attention (train / prefill). Returns [B,S,d]."""
+    q, k, v = _project_qkv(p, cfg, x, positions)
+    out = attention_core(q, k, v, causal=causal)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"],
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def gqa_decode(p: dict, cfg: ArchConfig, x: Array, cache: dict,
+               positions) -> Tuple[Array, dict]:
+    """One-token decode against a KV cache.
+
+    cache: {"k": [B,S,Hkv,hd], "v": [B,S,Hkv,hd], "index": scalar int32}
+    x: [B,1,d].
+    """
+    q, k_new, v_new = _project_qkv(p, cfg, x, positions)
+    idx = cache["index"]
+    k = jax.lax.dynamic_update_slice_in_dim(cache["k"], k_new.astype(cache["k"].dtype), idx, axis=1)
+    v = jax.lax.dynamic_update_slice_in_dim(cache["v"], v_new.astype(cache["v"].dtype), idx, axis=1)
+    # mask out unfilled cache slots via causal mask with q_offset=idx
+    out = attention_core(q, k, v, causal=True, q_offset=idx)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    return y, {"k": k, "v": v, "index": idx + 1}
+
+
+def gqa_cache_init(cfg: ArchConfig, batch: int, seq: int, dtype) -> dict:
+    hd = cfg.resolved_head_dim
+    return {
+        "k": jnp.zeros((batch, seq, cfg.n_kv_heads, hd), dtype=dtype),
+        "v": jnp.zeros((batch, seq, cfg.n_kv_heads, hd), dtype=dtype),
+        "index": jnp.zeros((), dtype=jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# cross attention (whisper decoder)
+# ---------------------------------------------------------------------------
+
+def cross_attn_init(key, cfg: ArchConfig, dtype) -> dict:
+    return gqa_init(key, cfg.replace(qk_norm=False), dtype)
+
+
+def cross_attn_forward(p: dict, cfg: ArchConfig, x: Array, enc_out: Array) -> Array:
+    """Decoder cross-attention over encoder output (no rope, no mask)."""
+    hd = cfg.resolved_head_dim
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    out = attention_core(q, k, v, causal=False)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"],
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# MLA attention (DeepSeek-V3)
+# ---------------------------------------------------------------------------
+
+def mla_init(key, cfg: ArchConfig, dtype) -> dict:
+    m: MLAConfig = cfg.mla
+    d, nq = cfg.d_model, cfg.n_heads
+    qk_hd = m.qk_nope_head_dim + m.qk_rope_head_dim
+    ks = jax.random.split(key, 6)
+    return {
+        "wq_a": dense_param(ks[0], d, m.q_lora_rank, dtype),
+        "q_a_norm": rmsnorm_init(m.q_lora_rank, dtype),
+        "wq_b": dense_param(ks[1], m.q_lora_rank, (nq, qk_hd), dtype),
+        # kv down-projection -> compressed latent + decoupled rope key
+        "wkv_a": dense_param(ks[2], d, m.kv_lora_rank + m.qk_rope_head_dim, dtype),
+        "kv_a_norm": rmsnorm_init(m.kv_lora_rank, dtype),
+        "wkv_b": dense_param(ks[3], m.kv_lora_rank,
+                             (nq, m.qk_nope_head_dim + m.v_head_dim), dtype),
+        "wo": _dense_init(ks[4], (nq, m.v_head_dim, d), nq * m.v_head_dim, dtype),
+    }
+
+
+def _mla_qkv(p: dict, cfg: ArchConfig, x: Array, positions):
+    m = cfg.mla
+    nq = cfg.n_heads
+    q_lat = jnp.einsum("bsd,dr->bsr", x, p["wq_a"],
+                       preferred_element_type=jnp.float32).astype(x.dtype)
+    q_lat = rmsnorm(p["q_a_norm"], q_lat, cfg.norm_eps)
+    q = jnp.einsum("bsr,rhk->bshk", q_lat, p["wq_b"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    q_nope, q_rope = jnp.split(q, [m.qk_nope_head_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    kv = jnp.einsum("bsd,dr->bsr", x, p["wkv_a"],
+                    preferred_element_type=jnp.float32).astype(x.dtype)
+    c_kv, k_rope = jnp.split(kv, [m.kv_lora_rank], axis=-1)
+    c_kv = rmsnorm(p["kv_a_norm"], c_kv, cfg.norm_eps)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)  # 1 head
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def _mla_attend(p: dict, cfg: ArchConfig, q_nope, q_rope, c_kv, k_rope,
+                q_offset=0) -> Array:
+    """Attention in the latent space: expand c_kv to per-head k_nope/v."""
+    m = cfg.mla
+    nq = cfg.n_heads
+    kv = jnp.einsum("bsr,rhk->bshk", c_kv, p["wkv_b"],
+                    preferred_element_type=jnp.float32).astype(c_kv.dtype)
+    k_nope, v = jnp.split(kv, [m.qk_nope_head_dim], axis=-1)
+    k_rope_b = jnp.broadcast_to(k_rope, (*k_rope.shape[:2], nq, m.qk_rope_head_dim))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope_b], axis=-1)
+    scale = 1.0 / np.sqrt(m.qk_nope_head_dim + m.qk_rope_head_dim)
+    return attention_core(q, k, v, causal=True, q_offset=q_offset,
+                          softmax_scale=scale)
+
+
+def mla_forward(p: dict, cfg: ArchConfig, x: Array, positions) -> Array:
+    q_nope, q_rope, c_kv, k_rope = _mla_qkv(p, cfg, x, positions)
+    out = _mla_attend(p, cfg, q_nope, q_rope, c_kv, k_rope)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"],
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def mla_decode(p: dict, cfg: ArchConfig, x: Array, cache: dict,
+               positions) -> Tuple[Array, dict]:
+    """Decode with the *compressed* MLA cache: {"c_kv":[B,S,r], "k_rope":[B,S,1,hd_r]}."""
+    q_nope, q_rope, c_new, kr_new = _mla_qkv(p, cfg, x, positions)
+    idx = cache["index"]
+    c_kv = jax.lax.dynamic_update_slice_in_dim(
+        cache["c_kv"], c_new.astype(cache["c_kv"].dtype), idx, axis=1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(
+        cache["k_rope"], kr_new.astype(cache["k_rope"].dtype), idx, axis=1)
+    out = _mla_attend(p, cfg, q_nope, q_rope, c_kv, k_rope, q_offset=idx)
+    y = jnp.einsum("bshk,hkd->bsd", out, p["wo"],
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+    return y, {"c_kv": c_kv, "k_rope": k_rope, "index": idx + 1}
+
+
+def mla_cache_init(cfg: ArchConfig, batch: int, seq: int, dtype) -> dict:
+    m = cfg.mla
+    return {
+        "c_kv": jnp.zeros((batch, seq, m.kv_lora_rank), dtype=dtype),
+        "k_rope": jnp.zeros((batch, seq, 1, m.qk_rope_head_dim), dtype=dtype),
+        "index": jnp.zeros((), dtype=jnp.int32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# gated MLP
+# ---------------------------------------------------------------------------
+
+def mlp_init(key, d: int, d_ff: int, dtype) -> dict:
+    ks = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_param(ks[0], d, d_ff, dtype),
+        "w_up": dense_param(ks[1], d, d_ff, dtype),
+        "w_down": dense_param(ks[2], d_ff, d, dtype),
+    }
+
+
+def mlp_forward(p: dict, x: Array) -> Array:
+    g = jnp.einsum("bsd,df->bsf", x, p["w_gate"],
+                   preferred_element_type=jnp.float32)
+    u = jnp.einsum("bsd,df->bsf", x, p["w_up"],
+                   preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(g) * u).astype(x.dtype)
+    return jnp.einsum("bsf,fd->bsd", h, p["w_down"],
+                      preferred_element_type=jnp.float32).astype(x.dtype)

@@ -1,0 +1,261 @@
+"""Mamba-2 layer via SSD (state-space duality), chunked algorithm.
+
+Reference: "Transformers are SSMs" (arXiv:2405.21060). The sequence is cut
+into chunks of length L; within a chunk the output is an attention-like
+masked-decay matmul (MXU-friendly), and a single ``lax.scan`` over chunks
+carries the [B,H,P,N] recurrent state — O(S) work, O(1) decode state.
+
+Shapes: x_head [B,S,H,P], dt [B,S,H], A [H] (negative), B/C broadcast from
+[B,S,G,N] groups to heads. State: [B,H,P,N].
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig, SSMConfig
+from repro.models import layers
+
+Array = jax.Array
+
+
+# ---------------------------------------------------------------------------
+# parameter init
+# ---------------------------------------------------------------------------
+
+def _dims(cfg: ArchConfig):
+    s: SSMConfig = cfg.ssm
+    d_in = s.expand * cfg.d_model
+    n_heads = d_in // s.head_dim
+    conv_ch = d_in + 2 * s.n_groups * s.d_state
+    return s, d_in, n_heads, conv_ch
+
+
+def ssm_init(key, cfg: ArchConfig, dtype) -> dict:
+    s, d_in, n_heads, conv_ch = _dims(cfg)
+    d = cfg.d_model
+    proj_out = 2 * d_in + 2 * s.n_groups * s.d_state + n_heads
+    ks = jax.random.split(key, 5)
+    return {
+        "in_proj": layers.dense_param(ks[0], d, proj_out, dtype),
+        "conv_w": (jax.random.normal(ks[1], (s.conv_width, conv_ch), jnp.float32)
+                   * 0.1).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "dt_bias": jnp.zeros((n_heads,), jnp.float32),
+        "A_log": jnp.zeros((n_heads,), jnp.float32),
+        "D": jnp.ones((n_heads,), jnp.float32),
+        "norm": layers.rmsnorm_init(d_in, dtype),
+        "out_proj": layers.dense_param(ks[4], d_in, d, dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# projections + causal depthwise conv
+# ---------------------------------------------------------------------------
+
+def _split_proj(p, cfg: ArchConfig, x: Array):
+    s, d_in, n_heads, _ = _dims(cfg)
+    gn = s.n_groups * s.d_state
+    proj = jnp.einsum("bsd,dk->bsk", x, p["in_proj"],
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+    z, xin, b_ssm, c_ssm, dt = jnp.split(
+        proj, [d_in, 2 * d_in, 2 * d_in + gn, 2 * d_in + 2 * gn], axis=-1)
+    return z, xin, b_ssm, c_ssm, dt
+
+
+def causal_conv(conv_w: Array, conv_b: Array, u: Array) -> Array:
+    """Depthwise causal conv1d. u: [B,S,C]; conv_w: [W,C]."""
+    w = conv_w.shape[0]
+    pad = jnp.pad(u, ((0, 0), (w - 1, 0), (0, 0)))
+    out = jnp.zeros_like(u, dtype=jnp.float32)
+    for i in range(w):
+        out = out + pad[:, i:i + u.shape[1], :].astype(jnp.float32) \
+            * conv_w[i].astype(jnp.float32)
+    return jax.nn.silu(out + conv_b.astype(jnp.float32)).astype(u.dtype)
+
+
+def _groups_to_heads(t: Array, n_heads: int, n_groups: int) -> Array:
+    """[B,S,G*N] -> [B,S,H,N]."""
+    b, s_, gn = t.shape
+    n = gn // n_groups
+    t = t.reshape(b, s_, n_groups, n)
+    rep = n_heads // n_groups
+    return jnp.broadcast_to(t[:, :, :, None, :], (b, s_, n_groups, rep, n)) \
+        .reshape(b, s_, n_heads, n)
+
+
+# ---------------------------------------------------------------------------
+# chunked SSD core
+# ---------------------------------------------------------------------------
+
+def ssd_chunked(x: Array, dt: Array, a: Array, b_ssm: Array, c_ssm: Array,
+                d_skip: Array, chunk: int,
+                initial_state: Array | None = None) -> Tuple[Array, Array]:
+    """SSD over a full sequence.
+
+    x: [B,S,H,P]; dt: [B,S,H] (post-softplus, >0); a: [H] (negative);
+    b_ssm/c_ssm: [B,S,H,N]; d_skip: [H]. Returns (y [B,S,H,P], state [B,H,P,N]).
+    """
+    bsz, seq, nh, hp = x.shape
+    nstate = b_ssm.shape[-1]
+    assert seq % chunk == 0, (seq, chunk)
+    nc = seq // chunk
+
+    # per-step log decay, f32 throughout the decay path
+    la = dt.astype(jnp.float32) * a.astype(jnp.float32)          # [B,S,H] (<0)
+    xc = x.reshape(bsz, nc, chunk, nh, hp)
+    dtc = dt.reshape(bsz, nc, chunk, nh).astype(jnp.float32)
+    lac = la.reshape(bsz, nc, chunk, nh)
+    bc = b_ssm.reshape(bsz, nc, chunk, nh, nstate)
+    cc = c_ssm.reshape(bsz, nc, chunk, nh, nstate)
+
+    cum = jnp.cumsum(lac, axis=2)                                # inclusive [B,C,L,H]
+    total = cum[:, :, -1, :]                                     # [B,C,H]
+
+    # ---- intra-chunk (attention-like) ----
+    # M[i,j] = exp(cum_i - cum_j) for j <= i
+    diff = cum[:, :, :, None, :] - cum[:, :, None, :, :]         # [B,C,L,L,H]
+    mask = jnp.tril(jnp.ones((chunk, chunk), bool))
+    m = jnp.where(mask[None, None, :, :, None], jnp.exp(diff), 0.0)
+    cb = jnp.einsum("bcihn,bcjhn->bchij", cc, bc,
+                    preferred_element_type=jnp.float32)
+    # scores[b,c,h,i,j] = (C_i . B_j) * M[i,j] * dt_j
+    m_h = jnp.moveaxis(m, -1, 2)                                 # [B,C,H,L,L]
+    dt_j = dtc.transpose(0, 1, 3, 2)[:, :, :, None, :]           # [B,C,H,1,L]
+    scores = cb * m_h * dt_j
+    y_intra = jnp.einsum("bchij,bcjhp->bcihp", scores.astype(x.dtype), xc,
+                         preferred_element_type=jnp.float32)
+
+    # ---- per-chunk local end-state ----
+    # S_local[c] = sum_j exp(total_c - cum_j) * dt_j * B_j (x) x_j
+    w_end = jnp.exp(total[:, :, None, :] - cum) * dtc            # [B,C,L,H]
+    s_local = jnp.einsum("bclh,bclhn,bclhp->bchpn",
+                         w_end.astype(x.dtype), bc, xc,
+                         preferred_element_type=jnp.float32)     # [B,C,H,P,N]
+
+    # ---- inter-chunk scan ----
+    if initial_state is None:
+        init = jnp.zeros((bsz, nh, hp, nstate), jnp.float32)
+    else:
+        init = initial_state.astype(jnp.float32)
+
+    def step(s_prev, inp):
+        s_loc, tot = inp                                         # [B,H,P,N], [B,H]
+        s_new = s_prev * jnp.exp(tot)[:, :, None, None] + s_loc
+        return s_new, s_prev
+
+    xs = (jnp.moveaxis(s_local, 1, 0), jnp.moveaxis(total, 1, 0))
+    s_final, s_prevs = jax.lax.scan(step, init, xs)
+    s_prevs = jnp.moveaxis(s_prevs, 0, 1)                        # [B,C,H,P,N]
+
+    # Y_inter[i] = exp(cum_i) * C_i . S_prev
+    y_inter = jnp.einsum("bclh,bclhn,bchpn->bclhp",
+                         jnp.exp(cum).astype(x.dtype), cc,
+                         s_prevs.astype(x.dtype),
+                         preferred_element_type=jnp.float32)
+
+    y = (y_intra + y_inter).reshape(bsz, seq, nh, hp)
+    y = y + x.astype(jnp.float32) * d_skip.astype(jnp.float32)[None, None, :, None]
+    return y.astype(x.dtype), s_final
+
+
+def ssd_decode_step(state: Array, x: Array, dt: Array, a: Array,
+                    b_ssm: Array, c_ssm: Array, d_skip: Array
+                    ) -> Tuple[Array, Array]:
+    """One recurrent step. state [B,H,P,N]; x [B,H,P]; dt [B,H];
+    b/c [B,H,N]. Returns (y [B,H,P], new state)."""
+    dt32 = dt.astype(jnp.float32)
+    decay = jnp.exp(dt32 * a.astype(jnp.float32))                 # [B,H]
+    inp = (dt32[:, :, None, None]
+           * x.astype(jnp.float32)[:, :, :, None]
+           * b_ssm.astype(jnp.float32)[:, :, None, :])
+    new_state = state * decay[:, :, None, None] + inp
+    y = jnp.einsum("bhpn,bhn->bhp", new_state,
+                   c_ssm.astype(jnp.float32))
+    y = y + x.astype(jnp.float32) * d_skip.astype(jnp.float32)[None, :, None]
+    return y.astype(x.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# full layer forward / decode
+# ---------------------------------------------------------------------------
+
+def ssm_forward(p: dict, cfg: ArchConfig, x: Array) -> Array:
+    """Full-sequence Mamba-2 block. x: [B,S,d] -> [B,S,d]."""
+    s, d_in, n_heads, _ = _dims(cfg)
+    bsz, seq, _ = x.shape
+    z, xin, b_raw, c_raw, dt_raw = _split_proj(p, cfg, x)
+    conv_in = jnp.concatenate([xin, b_raw, c_raw], axis=-1)
+    conv_out = causal_conv(p["conv_w"], p["conv_b"], conv_in)
+    xin, b_raw, c_raw = jnp.split(
+        conv_out, [d_in, d_in + s.n_groups * s.d_state], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xin.reshape(bsz, seq, n_heads, s.head_dim)
+    bh = _groups_to_heads(b_raw, n_heads, s.n_groups)
+    ch = _groups_to_heads(c_raw, n_heads, s.n_groups)
+
+    y, _ = ssd_chunked(xh, dt, a, bh, ch, p["D"], s.chunk_size)
+    y = y.reshape(bsz, seq, d_in)
+    y = layers.rmsnorm(p["norm"], y * jax.nn.silu(z.astype(jnp.float32))
+                       .astype(y.dtype), cfg.norm_eps)
+    return jnp.einsum("bsk,kd->bsd", y, p["out_proj"],
+                      preferred_element_type=jnp.float32).astype(x.dtype)
+
+
+def ssm_cache_init(cfg: ArchConfig, batch: int, dtype) -> dict:
+    s, d_in, n_heads, conv_ch = _dims(cfg)
+    return {
+        "conv": jnp.zeros((batch, s.conv_width - 1, conv_ch), dtype=dtype),
+        "state": jnp.zeros((batch, n_heads, s.head_dim, s.d_state), jnp.float32),
+    }
+
+
+def ssm_decode(p: dict, cfg: ArchConfig, x: Array, cache: dict
+               ) -> Tuple[Array, dict]:
+    """One-token decode. x: [B,1,d]. Cache: {"conv": [B,W-1,C], "state": [B,H,P,N]}."""
+    s, d_in, n_heads, _ = _dims(cfg)
+    bsz = x.shape[0]
+    z, xin, b_raw, c_raw, dt_raw = _split_proj(p, cfg, x)
+    conv_in = jnp.concatenate([xin, b_raw, c_raw], axis=-1)      # [B,1,C]
+    window = jnp.concatenate([cache["conv"], conv_in], axis=1)   # [B,W,C]
+    conv_out = (jnp.einsum("bwc,wc->bc", window.astype(jnp.float32),
+                           p["conv_w"].astype(jnp.float32))
+                + p["conv_b"].astype(jnp.float32))
+    conv_out = jax.nn.silu(conv_out).astype(x.dtype)[:, None, :]  # [B,1,C]
+    xin, b_raw, c_raw = jnp.split(
+        conv_out, [d_in, d_in + s.n_groups * s.d_state], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))     # [B,H]
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))
+    xh = xin[:, 0].reshape(bsz, n_heads, s.head_dim)
+    bh = _groups_to_heads(b_raw, n_heads, s.n_groups)[:, 0]
+    ch = _groups_to_heads(c_raw, n_heads, s.n_groups)[:, 0]
+
+    y, new_state = ssd_decode_step(cache["state"], xh, dt, a, bh, ch, p["D"])
+    y = y.reshape(bsz, 1, d_in)
+    y = layers.rmsnorm(p["norm"], y * jax.nn.silu(z.astype(jnp.float32))
+                       .astype(y.dtype), cfg.norm_eps)
+    out = jnp.einsum("bsk,kd->bsd", y, p["out_proj"],
+                     preferred_element_type=jnp.float32).astype(x.dtype)
+    new_cache = {"conv": window[:, 1:], "state": new_state}
+    return out, new_cache
+
+
+def ssd_reference(x, dt, a, b_ssm, c_ssm, d_skip):
+    """Naive O(S) sequential oracle for tests. Same signature as ssd_chunked
+    minus chunking. Returns (y, final_state)."""
+    bsz, seq, nh, hp = x.shape
+    n = b_ssm.shape[-1]
+    state = jnp.zeros((bsz, nh, hp, n), jnp.float32)
+    ys = []
+    for t in range(seq):
+        y, state = ssd_decode_step(state, x[:, t], dt[:, t], a,
+                                   b_ssm[:, t], c_ssm[:, t], d_skip)
+        ys.append(y)
+    return jnp.stack(ys, axis=1), state

@@ -1,0 +1,144 @@
+"""Mixture-of-Experts layer with capacity-based gather/scatter dispatch.
+
+Design notes
+------------
+We deliberately avoid the dense one-hot dispatch einsum (``[T,E] x [T,d]``):
+at 256 experts it multiplies HLO_FLOPs by ~E/top_k and destroys the
+MODEL_FLOPS/HLO_FLOPs roofline ratio. Instead tokens are ranked within their
+expert via a stable sort + segment offsets and scattered into an
+``[E, capacity, d]`` buffer; expert matmuls are batched einsums over the
+expert dim; results are gathered back and combined with router probabilities.
+Overflowed tokens (rank >= capacity) are dropped, standard for
+capacity-factor MoE. Under a sharded mesh the scatter/gather lowers to
+all-to-all style collectives between the token (data) and expert shardings.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig, MoEConfig
+from repro.models import layers
+
+Array = jax.Array
+
+
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def capacity(n_tokens: int, mcfg: MoEConfig) -> int:
+    c = math.ceil(n_tokens * mcfg.top_k / mcfg.n_experts * mcfg.capacity_factor)
+    return max(_round_up(c, 8), 8)
+
+
+def moe_init(key, cfg: ArchConfig, dtype) -> dict:
+    m = cfg.moe
+    d_ff = m.d_ff_expert or cfg.d_ff
+    d = cfg.d_model
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": layers.dense_param(ks[0], d, m.n_experts, jnp.float32),
+        "w_gate": layers._dense_init(ks[1], (m.n_experts, d, d_ff), d, dtype),
+        "w_up": layers._dense_init(ks[2], (m.n_experts, d, d_ff), d, dtype),
+        "w_down": layers._dense_init(ks[3], (m.n_experts, d_ff, d), d_ff, dtype),
+    }
+    if m.n_shared_experts:
+        p["shared"] = layers.mlp_init(ks[4], d, d_ff * m.n_shared_experts, dtype)
+    return p
+
+
+def route(router_w: Array, x_flat: Array, mcfg: MoEConfig) -> Tuple[Array, Array]:
+    """Router: returns (probs [T,K] float32, expert ids [T,K] int32)."""
+    logits = jnp.einsum("td,de->te", x_flat.astype(jnp.float32), router_w,
+                        preferred_element_type=jnp.float32)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_p, top_e = jax.lax.top_k(probs, mcfg.top_k)
+    top_p = top_p / jnp.maximum(top_p.sum(-1, keepdims=True), 1e-9)
+    return top_p, top_e.astype(jnp.int32)
+
+
+def dispatch_indices(top_e: Array, n_experts: int, cap: int) -> Tuple[Array, Array]:
+    """Compute destination slots for each (token, k) assignment.
+
+    Returns (dest [T*K] int32 in [0, E*cap] — E*cap is the drop slot,
+             valid [T*K] bool).
+    """
+    flat_e = top_e.reshape(-1)                                  # [T*K]
+    tk = flat_e.shape[0]
+    order = jnp.argsort(flat_e, stable=True)                    # tokens by expert
+    sorted_e = flat_e[order]
+    counts = jnp.zeros((n_experts,), jnp.int32).at[flat_e].add(1)
+    seg_start = jnp.concatenate(
+        [jnp.zeros((1,), jnp.int32), jnp.cumsum(counts)[:-1]])
+    rank_sorted = jnp.arange(tk, dtype=jnp.int32) - seg_start[sorted_e]
+    rank = jnp.zeros((tk,), jnp.int32).at[order].set(rank_sorted)
+    valid = rank < cap
+    dest = jnp.where(valid, flat_e * cap + rank, n_experts * cap)
+    return dest, valid
+
+
+def moe_forward(p: dict, cfg: ArchConfig, x: Array) -> Array:
+    """x: [B,S,d] -> [B,S,d]."""
+    m = cfg.moe
+    b, s, d = x.shape
+    t = b * s
+    xt = x.reshape(t, d)
+    cap = capacity(t, m)
+
+    top_p, top_e = route(p["router"], xt, m)
+    dest, valid = dispatch_indices(top_e, m.n_experts, cap)
+
+    # scatter tokens into expert buffers (extra row = drop slot)
+    x_rep = jnp.repeat(xt, m.top_k, axis=0)                     # [T*K, d]
+    buf = jnp.zeros((m.n_experts * cap + 1, d), x.dtype).at[dest].set(x_rep)
+    buf = buf[:-1].reshape(m.n_experts, cap, d)
+
+    # optional ZeRO-style weight gather (see sharding/context.py): forces
+    # GSPMD to all-gather pod-sharded expert weights instead of
+    # all-reducing the dispatch-sized einsum outputs
+    from repro.sharding import context as _shctx
+    w_gate, w_up, w_down = p["w_gate"], p["w_up"], p["w_down"]
+    shs = _shctx.get_moe_weight_shardings()
+    if shs is not None:
+        if shs[0] is not None:
+            w_gate = jax.lax.with_sharding_constraint(w_gate, shs[0])
+            w_up = jax.lax.with_sharding_constraint(w_up, shs[1])
+            w_down = jax.lax.with_sharding_constraint(w_down, shs[2])
+        if len(shs) > 3 and shs[3] is not None:
+            buf = jax.lax.with_sharding_constraint(buf, shs[3])
+
+    g = jnp.einsum("ecd,edf->ecf", buf, w_gate,
+                   preferred_element_type=jnp.float32)
+    u = jnp.einsum("ecd,edf->ecf", buf, w_up,
+                   preferred_element_type=jnp.float32)
+    h = (jax.nn.silu(g) * u).astype(x.dtype)
+    if shs is not None and len(shs) > 4 and shs[4] is not None:
+        h = jax.lax.with_sharding_constraint(h, shs[4])
+    y = jnp.einsum("ecf,efd->ecd", h, w_down,
+                   preferred_element_type=jnp.float32).astype(x.dtype)
+
+    y = jnp.concatenate(
+        [y.reshape(m.n_experts * cap, d), jnp.zeros((1, d), y.dtype)], axis=0)
+    y_tok = y[dest]                                             # [T*K, d]
+    w = (top_p.reshape(-1) * valid.astype(jnp.float32)).astype(jnp.float32)
+    out = (y_tok.astype(jnp.float32) * w[:, None]).reshape(t, m.top_k, d) \
+        .sum(axis=1).astype(x.dtype)
+
+    if m.n_shared_experts:
+        out = out + layers.mlp_forward(p["shared"], x).reshape(t, d)
+    return out.reshape(b, s, d)
+
+
+def aux_load_balance_loss(router_w: Array, x_flat: Array, mcfg: MoEConfig) -> Array:
+    """Switch-style load-balancing auxiliary loss (float32 scalar)."""
+    logits = jnp.einsum("td,de->te", x_flat.astype(jnp.float32), router_w)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top1 = jnp.argmax(probs, axis=-1)
+    frac_tokens = jnp.zeros((mcfg.n_experts,), jnp.float32) \
+        .at[top1].add(1.0) / x_flat.shape[0]
+    frac_probs = probs.mean(axis=0)
+    return mcfg.n_experts * jnp.sum(frac_tokens * frac_probs)

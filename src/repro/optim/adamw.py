@@ -1,0 +1,79 @@
+"""Sharded AdamW, written directly over pytrees.
+
+Moments inherit the parameter sharding (same tree paths -> same
+PartitionSpecs via ShardingRules).  ``moment_dtype="bfloat16"`` halves
+optimizer memory for the >=398B archs (DESIGN.md §6); the update math is
+always float32.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    grad_clip: float = 1.0
+    moment_dtype: str = "float32"
+
+
+def adamw_init(params: Any, cfg: AdamWConfig) -> dict:
+    dt = jnp.dtype(cfg.moment_dtype)
+    zeros = lambda p: jnp.zeros(p.shape, dtype=dt)
+    return {
+        "mu": jax.tree.map(zeros, params),
+        "nu": jax.tree.map(zeros, params),
+        "count": jnp.zeros((), jnp.int32),
+    }
+
+
+def global_norm(tree: Any) -> jax.Array:
+    leaves = [jnp.sum(jnp.square(x.astype(jnp.float32)))
+              for x in jax.tree.leaves(tree)]
+    return jnp.sqrt(jnp.sum(jnp.stack(leaves)))
+
+
+def adamw_update(grads: Any, opt_state: dict, params: Any,
+                 cfg: AdamWConfig, lr=None) -> Tuple[Any, dict, dict]:
+    """Returns (new_params, new_opt_state, metrics).
+
+    ``lr`` may be a traced scalar (dynamic schedules / Kishu hparam leaves);
+    defaults to the static cfg.lr."""
+    lr = cfg.lr if lr is None else lr
+    count = opt_state["count"] + 1
+    gnorm = global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / (gnorm + 1e-9)) \
+        if cfg.grad_clip > 0 else jnp.float32(1.0)
+    dt = jnp.dtype(cfg.moment_dtype)
+
+    def upd(g, mu, nu, p):
+        g32 = g.astype(jnp.float32) * clip
+        mu32 = mu.astype(jnp.float32) * cfg.b1 + g32 * (1 - cfg.b1)
+        nu32 = nu.astype(jnp.float32) * cfg.b2 + jnp.square(g32) * (1 - cfg.b2)
+        mu_hat = mu32 / (1 - cfg.b1 ** count.astype(jnp.float32))
+        nu_hat = nu32 / (1 - cfg.b2 ** count.astype(jnp.float32))
+        step = mu_hat / (jnp.sqrt(nu_hat) + cfg.eps)
+        p32 = p.astype(jnp.float32)
+        if p.ndim >= 2:   # decay matrices only (norms/scalars exempt)
+            p32 = p32 * (1 - lr * cfg.weight_decay)
+        new_p = p32 - lr * step
+        return new_p.astype(p.dtype), mu32.astype(dt), nu32.astype(dt)
+
+    out = jax.tree.map(upd, grads, opt_state["mu"], opt_state["nu"], params)
+    # unzip the 3-tuples
+    new_params = jax.tree.map(lambda t: t[0], out,
+                              is_leaf=lambda t: isinstance(t, tuple))
+    new_mu = jax.tree.map(lambda t: t[1], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    new_nu = jax.tree.map(lambda t: t[2], out,
+                          is_leaf=lambda t: isinstance(t, tuple))
+    metrics = {"grad_norm": gnorm}
+    return new_params, {"mu": new_mu, "nu": new_nu, "count": count}, metrics

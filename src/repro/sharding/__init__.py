@@ -1,0 +1,3 @@
+from repro.sharding.rules import ShardingRules
+
+__all__ = ["ShardingRules"]

@@ -1,0 +1,5 @@
+from repro.train.step import (TrainState, cross_entropy, make_decode_step,
+                              make_prefill_step, make_train_step)
+
+__all__ = ["TrainState", "cross_entropy", "make_decode_step",
+           "make_prefill_step", "make_train_step"]

@@ -1,0 +1,138 @@
+"""Step functions: train (value_and_grad + AdamW, remat, microbatching),
+prefill, and one-token decode.  All are factories returning closures that
+jit cleanly with explicit in/out shardings (launch/dryrun.py) or run eagerly
+on CPU (tests/examples).
+
+``train_step`` consumes/produces a TrainState pytree — exactly the pytree
+the Kishu session flattens into its namespace, so the paper's technique sees
+params/moments/rng/step as first-class variables.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ArchConfig
+from repro.models import lm
+from repro.optim.adamw import AdamWConfig, adamw_init, adamw_update
+
+TrainState = Dict[str, Any]     # {"params", "opt", "step", "rng"}
+
+
+def init_train_state(cfg: ArchConfig, key, opt_cfg: AdamWConfig) -> TrainState:
+    params = lm.init_params(cfg, key)
+    return {
+        "params": params,
+        "opt": adamw_init(params, opt_cfg),
+        "step": jnp.zeros((), jnp.int32),
+        "rng": jax.random.key_data(jax.random.key(0)),
+    }
+
+
+def abstract_train_state(cfg: ArchConfig, opt_cfg: AdamWConfig):
+    return jax.eval_shape(
+        lambda k: init_train_state(cfg, k, opt_cfg), jax.random.key(0))
+
+
+def cross_entropy(logits: jax.Array, labels: jax.Array,
+                  true_vocab: int) -> jax.Array:
+    """Mean token cross-entropy; positions >= true_vocab are masked padding
+    columns of the padded embedding table."""
+    v = logits.shape[-1]
+    if true_vocab < v:
+        neg = jnp.full((v - true_vocab,), -1e30, logits.dtype)
+        logits = logits.at[..., true_vocab:].set(neg)
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(logz - gold)
+
+
+def make_loss_fn(cfg: ArchConfig, *, remat: bool = True,
+                 moe_aux_coef: float = 0.01, mtp_coef: float = 0.1,
+                 unroll: bool = False, hidden_sharding=None):
+    def loss_fn(params, batch):
+        logits, aux = lm.forward(cfg, params, batch, training=True,
+                                 remat=remat, return_aux=True, unroll=unroll,
+                                 hidden_sharding=hidden_sharding)
+        loss = cross_entropy(logits, batch["labels"], cfg.vocab_size)
+        total = loss + moe_aux_coef * aux["moe_aux"]
+        if "mtp_logits" in aux:
+            # MTP predicts token t+2: shift labels by one more
+            lbl = batch["labels"]
+            lbl2 = jnp.concatenate([lbl[:, 1:], lbl[:, -1:]], axis=1)
+            total = total + mtp_coef * cross_entropy(
+                aux["mtp_logits"], lbl2, cfg.vocab_size)
+        return total, {"loss": loss, "moe_aux": aux["moe_aux"]}
+    return loss_fn
+
+
+def make_train_step(cfg: ArchConfig, opt_cfg: AdamWConfig, *,
+                    remat: bool = True, microbatches: int = 1,
+                    moe_aux_coef: float = 0.01, unroll: bool = False,
+                    hidden_sharding=None):
+    """Returns train_step(state, batch) -> (state, metrics)."""
+    loss_fn = make_loss_fn(cfg, remat=remat, moe_aux_coef=moe_aux_coef,
+                           unroll=unroll, hidden_sharding=hidden_sharding)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def _grads(params, batch):
+        if microbatches == 1:
+            (tot, aux), grads = grad_fn(params, batch)
+            return tot, aux, grads
+        # gradient accumulation over the batch dim (f32 accumulators)
+        def split(x):
+            b = x.shape[0]
+            assert b % microbatches == 0, (b, microbatches)
+            return x.reshape(microbatches, b // microbatches, *x.shape[1:])
+        mb = jax.tree.map(split, batch)
+        acc0 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+
+        def body(acc, one):
+            tot_a, aux_a, g_a = acc
+            (tot, aux), g = grad_fn(params, one)
+            g_a = jax.tree.map(lambda a, b_: a + b_.astype(jnp.float32), g_a, g)
+            return (tot_a + tot, jax.tree.map(jnp.add, aux_a, aux), g_a), None
+
+        aux0 = {"loss": jnp.zeros(()), "moe_aux": jnp.zeros(())}
+        (tot, aux, gacc), _ = jax.lax.scan(body, (jnp.zeros(()), aux0, acc0), mb)
+        scale = 1.0 / microbatches
+        grads = jax.tree.map(lambda g: (g * scale), gacc)
+        aux = jax.tree.map(lambda a: a * scale, aux)
+        return tot * scale, aux, grads
+
+    def train_step(state: TrainState, batch: Dict[str, Any], lr=None
+                   ) -> Tuple[TrainState, Dict[str, Any]]:
+        total, aux, grads = _grads(state["params"], batch)
+        new_params, new_opt, om = adamw_update(grads, state["opt"],
+                                               state["params"], opt_cfg, lr)
+        metrics = {"total_loss": total, **aux, **om,
+                   "step": state["step"] + 1}
+        new_state = {"params": new_params, "opt": new_opt,
+                     "step": state["step"] + 1, "rng": state["rng"]}
+        return new_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ArchConfig, *, unroll: bool = False,
+                      hidden_sharding=None):
+    """prefill_step(params, batch) -> logits [B,S,V] (sampling-ready)."""
+    def prefill_step(params, batch):
+        return lm.forward(cfg, params, batch, training=False, remat=False,
+                          unroll=unroll, hidden_sharding=hidden_sharding)
+    return prefill_step
+
+
+def make_decode_step(cfg: ArchConfig, *, greedy: bool = True,
+                     unroll: bool = False):
+    """serve_step(params, caches, batch) -> (next_token [B,1], caches)."""
+    def serve_step(params, caches, batch):
+        logits, caches = lm.decode_step(cfg, params, caches, batch,
+                                        unroll=unroll)
+        logits = logits[..., :cfg.vocab_size]
+        nxt = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return nxt, caches
+    return serve_step

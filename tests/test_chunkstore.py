@@ -1,0 +1,82 @@
+"""Chunk store backends: roundtrip, CAS dedup, metadata, fault injection."""
+import os
+
+import pytest
+
+from repro.core.chunkstore import (DirectoryStore, FaultInjectedStore,
+                                   MemoryStore, SQLiteStore, chunk_key,
+                                   open_store)
+from repro.core.serialize import ChunkMissingError
+
+
+@pytest.fixture(params=["memory", "dir", "sqlite"])
+def store(request, tmp_path):
+    if request.param == "memory":
+        return MemoryStore()
+    if request.param == "dir":
+        return DirectoryStore(str(tmp_path / "cas"))
+    return SQLiteStore(str(tmp_path / "cas.db"))
+
+
+def test_roundtrip(store):
+    data = b"hello world" * 100
+    k = chunk_key(data)
+    assert store.put_chunk(k, data) is True
+    assert store.get_chunk(k) == data
+    assert store.has_chunk(k)
+    assert store.n_chunks() == 1
+    assert store.chunk_bytes_total() == len(data)
+
+
+def test_cas_dedup(store):
+    data = b"x" * 1000
+    k = chunk_key(data)
+    assert store.put_chunk(k, data) is True
+    assert store.put_chunk(k, data) is False       # already present
+    assert store.n_chunks() == 1
+
+
+def test_missing_chunk_raises(store):
+    with pytest.raises(ChunkMissingError):
+        store.get_chunk("deadbeef" * 4)
+
+
+def test_meta_roundtrip(store):
+    store.put_meta("commit/c1", {"a": 1, "nested": {"b": [1, 2]}})
+    store.put_meta("commit/c2", {"a": 2})
+    store.put_meta("HEAD", {"head": "c2"})
+    assert store.get_meta("commit/c1")["nested"]["b"] == [1, 2]
+    assert store.list_meta("commit/") == ["commit/c1", "commit/c2"]
+    assert store.get_meta("nope") is None
+
+
+def test_delete_chunk(store):
+    data = b"abc" * 10
+    k = chunk_key(data)
+    store.put_chunk(k, data)
+    store.delete_chunk(k)
+    assert not store.has_chunk(k)
+    store.delete_chunk(k)                          # idempotent
+
+
+def test_fault_injection():
+    inner = MemoryStore()
+    bad = {"victim"}
+    fs = FaultInjectedStore(inner, fail_get=lambda k: k in bad)
+    fs.put_chunk("victim", b"data")
+    fs.put_chunk("fine", b"data2")
+    assert fs.get_chunk("fine") == b"data2"
+    with pytest.raises(ChunkMissingError):
+        fs.get_chunk("victim")
+
+
+def test_open_store(tmp_path):
+    assert isinstance(open_store("memory://"), MemoryStore)
+    assert isinstance(open_store(f"dir://{tmp_path}/a"), DirectoryStore)
+    assert isinstance(open_store(f"sqlite://{tmp_path}/b.db"), SQLiteStore)
+    assert isinstance(open_store(str(tmp_path / "c")), DirectoryStore)
+
+
+def test_chunk_key_is_content_addressed():
+    assert chunk_key(b"a") == chunk_key(b"a")
+    assert chunk_key(b"a") != chunk_key(b"b")

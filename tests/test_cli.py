@@ -1,0 +1,75 @@
+"""kishu CLI: log/show/diff/stats/verify/gc against a directory store."""
+import numpy as np
+import pytest
+
+from repro.core import KishuSession, open_store
+from repro.launch.kishu_cli import main as cli
+
+
+@pytest.fixture
+def store_uri(tmp_path):
+    uri = f"dir://{tmp_path}/cas"
+    s = KishuSession(open_store(uri), chunk_bytes=1 << 10)
+
+    def set_val(ns, name, val):
+        ns[name] = np.full(500, float(val), np.float32)
+    s.register("set_val", set_val)
+    s.init_state({})
+    s.run("set_val", name="x", val=1)
+    root = s.head
+    s.run("set_val", name="y", val=2)
+    s.checkout(root)
+    s.run("set_val", name="y", val=3)
+    s.close()
+    return uri, s
+
+
+def test_log_show_diff_stats(store_uri, capsys):
+    uri, s = store_uri
+    assert cli(["--store", uri, "log"]) == 0
+    out = capsys.readouterr().out
+    assert "set_val" in out and "*" in out
+
+    head = s.graph.head
+    assert cli(["--store", uri, "show", head]) == 0
+    out = capsys.readouterr().out
+    assert "upd y" in out
+
+    nodes = sorted(s.graph.nodes)
+    assert cli(["--store", uri, "diff", nodes[-2], nodes[-1]]) == 0
+    out = capsys.readouterr().out
+    assert "diverged" in out
+
+    assert cli(["--store", uri, "stats"]) == 0
+    assert "chunks" in capsys.readouterr().out
+
+
+def test_verify_detects_missing_chunk(store_uri, capsys):
+    uri, s = store_uri
+    assert cli(["--store", uri, "verify", "--deep"]) == 0
+    assert "OK" in capsys.readouterr().out
+    # drop one chunk
+    store = open_store(uri)
+    man = next(m for n in s.graph.nodes.values()
+               for m in n.manifests.values() if not m.get("unserializable"))
+    store.delete_chunk(man["base"]["chunks"][0]["key"])
+    assert cli(["--store", uri, "verify"]) == 2
+    assert "MISSING" in capsys.readouterr().out
+
+
+def test_gc_dry_run_and_real(store_uri, capsys):
+    uri, s = store_uri
+    # orphan a chunk by writing junk directly
+    store = open_store(uri)
+    store.put_chunk("deadbeef" * 4, b"junk")
+    assert cli(["--store", uri, "gc", "--dry-run"]) == 0
+    assert "would drop 1" in capsys.readouterr().out
+    assert cli(["--store", uri, "gc"]) == 0
+    assert "dropped 1" in capsys.readouterr().out
+    assert not store.has_chunk("deadbeef" * 4)
+
+
+def test_bad_commit_errors(store_uri):
+    uri, _ = store_uri
+    assert cli(["--store", uri, "show", "c99999"]) == 1
+    assert cli(["--store", uri, "diff", "c99999", "c00000"]) == 1

@@ -1,0 +1,141 @@
+"""Co-variable detection tests (Defs 1-3, Lemma 1)."""
+import numpy as np
+import pytest
+
+from repro.core.covariable import (RecordBuilder, cov_key, detect_delta,
+                                   group_covariables)
+from repro.core.namespace import Namespace, TrackedNamespace
+from repro.core.serialize import OpaqueLeaf
+
+
+def build_all(ns, builder=None):
+    builder = builder or RecordBuilder(chunk_bytes=1 << 12)
+    cache = {}
+    return {n: builder.build(n, ns[n], cache) for n in ns.names()}
+
+
+def test_alias_groups_share_covariable():
+    ns = Namespace()
+    w = np.ones((4, 4), np.float32)
+    ns["a"] = w
+    ns["b"] = w                       # same buffer
+    ns["c"] = w.copy()                # equal values, different buffer
+    covs = group_covariables(build_all(ns))
+    assert cov_key(["a", "b"]) in covs
+    assert cov_key(["c"]) in covs
+
+
+def test_numpy_views_form_covariable():
+    ns = Namespace()
+    base = np.arange(100, dtype=np.float32)
+    ns["x"] = base[:50]
+    ns["y"] = base[50:]
+    ns["z"] = np.arange(7.0)
+    covs = group_covariables(build_all(ns))
+    assert cov_key(["x", "y"]) in covs
+    assert cov_key(["z"]) in covs
+
+
+def _detect(ns, tracked, records, covs):
+    accessed = set(tracked.accessed) | set(tracked.written) | set(tracked.deleted)
+    return detect_delta(records, covs, ns, accessed,
+                        RecordBuilder(chunk_bytes=1 << 12))
+
+
+def test_lemma1_pruning_and_no_false_negative():
+    ns = Namespace()
+    ns["p"] = np.zeros(10, np.float32)
+    ns["q"] = np.ones(10, np.float32)
+    ns["r"] = np.full(10, 2.0, np.float32)
+    records = build_all(ns)
+    covs = group_covariables(records)
+
+    t = TrackedNamespace(ns)
+    t["p"] = t["p"] + 1               # touch p only
+    delta, new_records = _detect(ns, t, records, covs)
+    assert cov_key(["p"]) in delta.updated
+    assert delta.skipped == 2          # q, r pruned without inspection
+    assert cov_key(["q"]) not in delta.updated
+
+
+def test_access_without_change_is_not_update():
+    ns = Namespace()
+    ns["p"] = np.zeros(10, np.float32)
+    records = build_all(ns)
+    covs = group_covariables(records)
+    t = TrackedNamespace(ns)
+    _ = t["p"]                         # read only
+    t["p"] = ns["p"]                   # write-back same object
+    delta, _ = _detect(ns, t, records, covs)
+    assert not delta.updated
+    assert cov_key(["p"]) in delta.unchanged_accessed
+
+
+def test_rebind_same_values_not_update():
+    """Functional updates create new arrays; unchanged *values* must not be
+    flagged (our hash compare improves on the paper's address compare)."""
+    ns = Namespace()
+    ns["p"] = np.arange(10, dtype=np.float32)
+    records = build_all(ns)
+    covs = group_covariables(records)
+    t = TrackedNamespace(ns)
+    t["p"] = ns["p"].copy()            # new buffer, same content
+    delta, _ = _detect(ns, t, records, covs)
+    assert not delta.updated
+
+
+def test_split_and_merge():
+    ns = Namespace()
+    w = np.ones(8, np.float32)
+    ns["a"] = w
+    ns["b"] = w
+    records = build_all(ns)
+    covs = group_covariables(records)
+    # split: b becomes independent
+    t = TrackedNamespace(ns)
+    t["b"] = w.copy()
+    delta, records = _detect(ns, t, records, covs)
+    assert cov_key(["a", "b"]) in delta.deleted
+    assert cov_key(["a"]) in delta.updated and cov_key(["b"]) in delta.updated
+    covs = group_covariables(records)
+    # merge: retie
+    t = TrackedNamespace(ns)
+    t["b"] = t["a"]
+    delta, records = _detect(ns, t, records, covs)
+    assert cov_key(["a", "b"]) in delta.updated
+    assert cov_key(["a"]) in delta.deleted and cov_key(["b"]) in delta.deleted
+
+
+def test_structure_change_is_update():
+    ns = Namespace()
+    ns["p"] = np.zeros((4, 4), np.float32)
+    records = build_all(ns)
+    covs = group_covariables(records)
+    t = TrackedNamespace(ns)
+    t["p"] = np.zeros((4, 4), np.float64)   # dtype change, same bytes? no — width
+    delta, _ = _detect(ns, t, records, covs)
+    assert cov_key(["p"]) in delta.updated
+
+
+def test_opaque_updated_on_access():
+    ns = Namespace()
+    ns["g"] = OpaqueLeaf(payload=1)
+    records = build_all(ns)
+    covs = group_covariables(records)
+    t = TrackedNamespace(ns)
+    _ = t["g"]                         # read counts as possible update
+    delta, _ = _detect(ns, t, records, covs)
+    assert cov_key(["g"]) in delta.updated   # conservative (Table 5 semantics)
+
+
+def test_deleted_names():
+    ns = Namespace()
+    ns["p"] = np.zeros(4, np.float32)
+    ns["q"] = np.ones(4, np.float32)
+    records = build_all(ns)
+    covs = group_covariables(records)
+    t = TrackedNamespace(ns)
+    del t["q"]
+    delta, records = _detect(ns, t, records, covs)
+    assert cov_key(["q"]) in delta.deleted
+    assert "q" not in records

@@ -1,0 +1,98 @@
+"""Checkpoint Graph tests: commits, LCA, Def 5/6, persistence."""
+import numpy as np
+import pytest
+
+from repro.core.chunkstore import MemoryStore
+from repro.core.graph import CheckpointGraph, key_str, parse_key
+
+
+def _commit(g, updated, deleted=(), accessed=None):
+    return g.commit(command={"name": "cmd", "args": {}},
+                    manifests={key_str(k): {"members": [],
+                                            "unserializable": False}
+                               for k in updated},
+                    deleted_keys=list(deleted),
+                    accessed=accessed or {},
+                    updated_keys=list(updated))
+
+
+def test_linear_chain_and_index():
+    g = CheckpointGraph(MemoryStore())
+    g.init_root()
+    a = _commit(g, [("x",)]).commit_id
+    b = _commit(g, [("y",)]).commit_id
+    c = _commit(g, [("x",)]).commit_id
+    idx = g.state_index(c)
+    assert idx[key_str(("x",))] == c
+    assert idx[key_str(("y",))] == b
+
+
+def test_branching_and_lca():
+    g = CheckpointGraph(MemoryStore())
+    g.init_root()
+    a = _commit(g, [("x",), ("d",)]).commit_id
+    b = _commit(g, [("x",)]).commit_id           # branch 1
+    g.set_head(a)
+    c = _commit(g, [("x",)]).commit_id           # branch 2
+    assert g.lca(b, c) == a
+    assert g.lca(b, b) == b
+    assert g.lca(a, c) == a
+    # Def 6: d identical (version a in both + LCA); x diverged
+    assert g.identical_via_lca(("d",), b, c)
+    assert not g.identical_via_lca(("x",), b, c)
+
+
+def test_diff_matches_lca_definition():
+    g = CheckpointGraph(MemoryStore())
+    g.init_root()
+    _commit(g, [("a",), ("b",), ("c",)])
+    r = g.head
+    b1 = _commit(g, [("a",)]).commit_id
+    b2 = _commit(g, [("b",)]).commit_id
+    g.set_head(r)
+    b3 = _commit(g, [("a",), ("d",)], deleted=[("c",)]).commit_id
+    plan = g.diff(b2, b3)
+    for k in plan.identical:
+        assert g.identical_via_lca(k, b2, b3)
+    for k in plan.to_load:
+        assert not g.identical_via_lca(k, b2, b3)
+    # c was deleted on branch 2: must be in to_delete going b2 -> b3
+    assert ("c",) in plan.to_delete
+    assert ("d",) in plan.to_load
+
+
+def test_deleted_covariable_not_in_index():
+    g = CheckpointGraph(MemoryStore())
+    g.init_root()
+    _commit(g, [("x",)])
+    n = _commit(g, [], deleted=[("x",)])
+    assert key_str(("x",)) not in g.state_index(n.commit_id)
+
+
+def test_persistence_reload():
+    store = MemoryStore()
+    g = CheckpointGraph(store)
+    g.init_root()
+    a = _commit(g, [("x",)], accessed={("x",): "c00000"}).commit_id
+    b = _commit(g, [("y",)]).commit_id
+    g2 = CheckpointGraph(store)
+    assert g2.head == b
+    assert set(g2.nodes) == set(g.nodes)
+    assert g2.nodes[a].accessed == {key_str(("x",)): "c00000"}
+    # continue committing after reload: no id collisions
+    c = _commit(g2, [("z",)]).commit_id
+    assert c not in g.nodes
+
+
+def test_key_str_roundtrip():
+    for key in [("a",), ("a", "b/c"), ("x/y/z", "w")]:
+        assert parse_key(key_str(key)) == key
+
+
+def test_log_and_path():
+    g = CheckpointGraph(MemoryStore())
+    g.init_root()
+    a = _commit(g, [("x",)]).commit_id
+    b = _commit(g, [("y",)]).commit_id
+    assert [e["commit"] for e in g.log()] == ["c00000", a, b]
+    assert g.path_from_root(b) == ["c00000", a, b]

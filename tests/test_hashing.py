@@ -1,0 +1,60 @@
+"""Hash-spec tests: np/jnp agreement, sensitivity, length folding."""
+import numpy as np
+import jax.numpy as jnp
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import hashing as H
+
+
+@pytest.mark.parametrize("size", [0, 1, 3, 4, 100, 4096, 4097, 1 << 16])
+def test_np_jnp_agree(size):
+    rng = np.random.default_rng(size)
+    buf = rng.integers(0, 256, size, dtype=np.uint8).tobytes()
+    cb = 4096
+    h_np = H.chunk_hashes_np(buf, cb)
+    if size == 0:
+        assert h_np.size == 0
+        return
+    words, nbytes = H.words_view(buf, cb)
+    h_j = H.combine_u64(np.asarray(
+        H.chunk_hashes_jnp(jnp.asarray(words), jnp.asarray(nbytes))))
+    assert np.array_equal(h_np, h_j)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.binary(min_size=1, max_size=5000),
+       st.integers(min_value=0, max_value=4999))
+def test_single_byte_flip_changes_hash(buf, pos):
+    pos = pos % len(buf)
+    cb = 1024
+    h1 = H.chunk_hashes_np(buf, cb)
+    b2 = bytearray(buf)
+    b2[pos] ^= 0x5A
+    h2 = H.chunk_hashes_np(bytes(b2), cb)
+    chunk = pos // cb
+    assert h1[chunk] != h2[chunk]
+    # all other chunks unaffected
+    mask = np.ones(len(h1), bool)
+    mask[chunk] = False
+    assert np.array_equal(h1[mask], h2[mask])
+
+
+def test_length_folding_prevents_pad_collisions():
+    for n in (1, 5, 100, 4095):
+        a = H.chunk_hashes_np(b"\x00" * n, 4096)
+        b = H.chunk_hashes_np(b"\x00" * (n + 1), 4096)
+        assert a[0] != b[0]
+
+
+def test_order_sensitivity():
+    a = H.chunk_hashes_np(b"\x01\x00\x00\x00\x02\x00\x00\x00", 4096)
+    b = H.chunk_hashes_np(b"\x02\x00\x00\x00\x01\x00\x00\x00", 4096)
+    assert a[0] != b[0]
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.binary(min_size=0, max_size=10_000))
+def test_deterministic(buf):
+    assert np.array_equal(H.chunk_hashes_np(buf, 2048),
+                          H.chunk_hashes_np(bytes(buf), 2048))

@@ -1,0 +1,70 @@
+"""Flash-attention Pallas kernel vs naive oracle: shape/GQA/block sweeps in
+interpret mode, plus equivalence with the model's attention core."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention import flash_attention
+
+CASES = [
+    # B, S, Hq, Hkv, hd, bq, bk, causal
+    (2, 128, 4, 2, 64, 32, 32, True),
+    (1, 256, 8, 8, 32, 64, 128, True),
+    (2, 64, 6, 2, 16, 64, 64, False),
+    (1, 512, 2, 1, 128, 128, 64, True),
+    (1, 64, 15, 5, 64, 64, 64, True),      # smollm-style head counts
+]
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_flash_matches_reference(case):
+    b, s, hq, hkv, hd, bq, bk, causal = case
+    ks = jax.random.split(jax.random.key(sum(case)), 3)
+    q = jax.random.normal(ks[0], (b, s, hq, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, hkv, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, hkv, hd), jnp.float32)
+    got = flash_attention(q, k, v, causal=causal, block_q=bq, block_k=bk,
+                          interpret=True)
+    want = flash_attention(q, k, v, causal=causal, backend="ref")
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=3e-5, rtol=1e-4)
+
+
+def test_flash_matches_model_attention_core():
+    from repro.models.layers import attention_core
+    ks = jax.random.split(jax.random.key(9), 3)
+    b, s, hq, hkv, hd = 2, 128, 4, 2, 32
+    q = jax.random.normal(ks[0], (b, s, hq, hd), jnp.float32)
+    k = jax.random.normal(ks[1], (b, s, hkv, hd), jnp.float32)
+    v = jax.random.normal(ks[2], (b, s, hkv, hd), jnp.float32)
+    got = flash_attention(q, k, v, causal=True, block_q=32, block_k=32,
+                          interpret=True)
+    want = attention_core(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=3e-5, rtol=1e-4)
+
+
+def test_flash_bf16():
+    ks = jax.random.split(jax.random.key(1), 3)
+    q = jax.random.normal(ks[0], (1, 64, 2, 32), jnp.bfloat16)
+    k = jax.random.normal(ks[1], (1, 64, 2, 32), jnp.bfloat16)
+    v = jax.random.normal(ks[2], (1, 64, 2, 32), jnp.bfloat16)
+    got = flash_attention(q, k, v, block_q=32, block_k=32, interpret=True)
+    want = flash_attention(q, k, v, backend="ref")
+    assert got.dtype == jnp.bfloat16
+    np.testing.assert_allclose(np.asarray(got, dtype=np.float32),
+                               np.asarray(want, dtype=np.float32),
+                               atol=3e-2, rtol=3e-2)
+
+
+def test_first_row_attends_only_itself():
+    """Causal row 0 must equal v[0] exactly (online softmax edge case)."""
+    ks = jax.random.split(jax.random.key(2), 3)
+    q = jax.random.normal(ks[0], (1, 64, 1, 16), jnp.float32)
+    k = jax.random.normal(ks[1], (1, 64, 1, 16), jnp.float32)
+    v = jax.random.normal(ks[2], (1, 64, 1, 16), jnp.float32)
+    out = flash_attention(q, k, v, causal=True, block_q=16, block_k=16,
+                          interpret=True)
+    np.testing.assert_allclose(np.asarray(out[0, 0, 0]),
+                               np.asarray(v[0, 0, 0]), atol=1e-5)

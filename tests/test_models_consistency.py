@@ -1,0 +1,155 @@
+"""Numerical consistency: SSD vs sequential oracle, MoE vs dense reference,
+prefill vs decode for all archs, MLA cache equivalence."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.models import get_config, layers, lm, mamba
+from repro.models import moe as moe_lib
+from repro.models.config import MoEConfig
+from repro.models.testing import reduced
+
+ARCHS = ["mamba2-780m", "stablelm-12b", "smollm-360m", "mistral-nemo-12b",
+         "qwen3-1.7b", "jamba-1.5-large-398b", "whisper-large-v3",
+         "phi3.5-moe-42b-a6.6b", "deepseek-v3-671b", "qwen2-vl-72b"]
+
+
+@pytest.mark.parametrize("chunk", [8, 16, 32, 64])
+def test_ssd_chunked_vs_sequential(chunk):
+    ks = jax.random.split(jax.random.key(1), 5)
+    B, S, H, P, N = 2, 64, 4, 8, 16
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    a = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    b = jax.random.normal(ks[3], (B, S, H, N)) * 0.5
+    c = jax.random.normal(ks[4], (B, S, H, N)) * 0.5
+    d = jnp.ones((H,))
+    y_ref, s_ref = mamba.ssd_reference(x, dt, a, b, c, d)
+    y, s = mamba.ssd_chunked(x, dt, a, b, c, d, chunk)
+    np.testing.assert_allclose(np.asarray(y), np.asarray(y_ref),
+                               atol=5e-5, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(s), np.asarray(s_ref),
+                               atol=5e-5, rtol=1e-4)
+
+
+def test_ssd_initial_state_threading():
+    """Running two halves with carried state == running the whole sequence."""
+    ks = jax.random.split(jax.random.key(3), 5)
+    B, S, H, P, N = 1, 32, 2, 4, 8
+    x = jax.random.normal(ks[0], (B, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (B, S, H)))
+    a = -jnp.exp(jax.random.normal(ks[2], (H,)) * 0.5)
+    b = jax.random.normal(ks[3], (B, S, H, N)) * 0.5
+    c = jax.random.normal(ks[4], (B, S, H, N)) * 0.5
+    d = jnp.zeros((H,))
+    y_full, s_full = mamba.ssd_chunked(x, dt, a, b, c, d, 8)
+    y1, s1 = mamba.ssd_chunked(x[:, :16], dt[:, :16], a, b[:, :16],
+                               c[:, :16], d, 8)
+    y2, s2 = mamba.ssd_chunked(x[:, 16:], dt[:, 16:], a, b[:, 16:],
+                               c[:, 16:], d, 8, initial_state=s1)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), atol=5e-5, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full),
+                               atol=5e-5, rtol=1e-4)
+
+
+def _dense_moe_reference(p, cfg, x):
+    """No-drop dense reference: out = sum_k p_k * expert_k(x)."""
+    m = cfg.moe
+    b, s, d = x.shape
+    xt = x.reshape(-1, d)
+    top_p, top_e = moe_lib.route(p["router"], xt, m)
+    outs = []
+    for e in range(m.n_experts):
+        g = xt @ p["w_gate"][e]
+        u = xt @ p["w_up"][e]
+        outs.append((jax.nn.silu(g) * u) @ p["w_down"][e])
+    ys = jnp.stack(outs, 1)                       # [T, E, d]
+    w = jnp.zeros((xt.shape[0], m.n_experts))
+    for k in range(m.top_k):
+        w = w.at[jnp.arange(xt.shape[0]), top_e[:, k]].add(top_p[:, k])
+    out = jnp.einsum("te,ted->td", w, ys)
+    if m.n_shared_experts:
+        from repro.models import layers as L
+        out = out + L.mlp_forward(p["shared"], x).reshape(-1, d)
+    return out.reshape(b, s, d)
+
+
+def test_moe_dispatch_matches_dense_reference():
+    cfg = reduced(get_config("phi3.5-moe-42b-a6.6b"))
+    p = moe_lib.moe_init(jax.random.key(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (2, 8, cfg.d_model))
+    got = moe_lib.moe_forward(p, cfg, x)           # cf=8 -> no drops
+    want = _dense_moe_reference(p, cfg, x)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               atol=2e-5, rtol=1e-4)
+
+
+def test_moe_capacity_dropping():
+    cfg = reduced(get_config("phi3.5-moe-42b-a6.6b"))
+    cfg = cfg.replace(moe=MoEConfig(n_experts=4, top_k=2, d_ff_expert=64,
+                                    capacity_factor=0.25))
+    p = moe_lib.moe_init(jax.random.key(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (4, 16, cfg.d_model))
+    y = moe_lib.moe_forward(p, cfg, x)
+    assert bool(jnp.isfinite(y).all())
+    # with brutal capacity, some tokens must be dropped (output smaller norm)
+    t = x.reshape(-1, cfg.d_model).shape[0]
+    cap = moe_lib.capacity(t, cfg.moe)
+    _, top_e = moe_lib.route(p["router"], x.reshape(-1, cfg.d_model), cfg.moe)
+    dest, valid = moe_lib.dispatch_indices(top_e, 4, cap)
+    assert int(valid.sum()) < valid.shape[0]
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_prefill_decode_consistency(arch):
+    cfg = reduced(get_config(arch))
+    params = lm.init_params(cfg, jax.random.key(0))
+    B, S = 2, 8
+    toks = jax.random.randint(jax.random.key(2), (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": toks}
+    if cfg.frontend == "vision":
+        x = jax.random.normal(jax.random.key(3), (B, S, cfg.d_model))
+        pos = jnp.broadcast_to(jnp.arange(S)[None], (B, S)).astype(jnp.int32)
+        batch = {"embeds": x, "positions_thw": jnp.stack([pos] * 3, -1)}
+    if cfg.enc_dec:
+        batch["enc_embeds"] = jax.random.normal(jax.random.key(4),
+                                                (B, S, cfg.d_model))
+    full = lm.forward(cfg, params, batch)
+    caches = lm.init_caches(cfg, B, S, enc_seq=S if cfg.enc_dec else 0)
+    if cfg.enc_dec:
+        caches["enc_out"] = lm.encode(cfg, params, batch, remat=False)
+    outs = []
+    for t in range(S):
+        db = {"index": jnp.asarray(t, jnp.int32)}
+        if cfg.frontend == "vision":
+            db["embeds"] = batch["embeds"][:, t:t + 1]
+        else:
+            db["tokens"] = toks[:, t:t + 1]
+        lg, caches = lm.decode_step(cfg, params, caches, db)
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, axis=1)
+    err = float(jnp.max(jnp.abs(full - dec)))
+    assert err < 2e-3, f"{arch}: prefill/decode diverge by {err}"
+
+
+def test_mrope_differs_from_rope_when_positions_disagree():
+    cfg = reduced(get_config("qwen2-vl-72b"))
+    p = layers.gqa_init(jax.random.key(0), cfg, jnp.float32)
+    x = jax.random.normal(jax.random.key(1), (1, 8, cfg.d_model))
+    pos = jnp.broadcast_to(jnp.arange(8)[None], (1, 8)).astype(jnp.int32)
+    same = jnp.stack([pos, pos, pos], -1)
+    diff = jnp.stack([pos, pos * 2, pos * 3], -1)
+    y1 = layers.gqa_forward(p, cfg, x, same)
+    y2 = layers.gqa_forward(p, cfg, x, diff)
+    assert not np.allclose(np.asarray(y1), np.asarray(y2))
+
+
+def test_remat_matches_no_remat():
+    cfg = reduced(get_config("qwen3-1.7b"))
+    params = lm.init_params(cfg, jax.random.key(0))
+    toks = jax.random.randint(jax.random.key(1), (2, 16), 0, cfg.vocab_size)
+    a = lm.forward(cfg, params, {"tokens": toks}, remat=False)
+    b = lm.forward(cfg, params, {"tokens": toks}, remat=True)
+    np.testing.assert_allclose(np.asarray(a), np.asarray(b), atol=1e-5)

@@ -1,0 +1,180 @@
+"""Hypothesis property tests over the system's invariants.
+
+Random command sequences (in-place update / rebind / create / delete /
+alias / unalias / branch checkout) against a model of the state, asserting:
+
+  P1  checkout reproduces the recorded state bit-exactly (Remark §5.3)
+  P2  delta detection has no false negatives (Table 5: Fail == 0)
+  P3  index-based divergence == Def-6 LCA divergence
+  P4  storage is append-only content-addressed: re-writing identical data
+      adds no chunks
+"""
+import numpy as np
+import pytest
+from hypothesis import HealthCheck, given, settings, strategies as st
+
+from repro.core import KishuSession, MemoryStore, cov_key
+from repro.core.graph import parse_key
+
+NAMES = ["a", "b", "c", "d"]
+
+op = st.one_of(
+    st.tuples(st.just("bump"), st.sampled_from(NAMES)),
+    st.tuples(st.just("rebind_same"), st.sampled_from(NAMES)),
+    st.tuples(st.just("create"), st.sampled_from(["e", "f"])),
+    st.tuples(st.just("delete"), st.sampled_from(NAMES + ["e", "f"])),
+    st.tuples(st.just("alias"), st.sampled_from(NAMES),
+              st.sampled_from(NAMES)),
+    st.tuples(st.just("checkout"), st.integers(min_value=0, max_value=100)),
+)
+
+
+def _snapshot(ns):
+    out = {}
+    for name in ns.names():
+        v = ns[name]
+        out[name] = np.asarray(v).copy() if isinstance(v, np.ndarray) else v
+    return out
+
+
+def _apply(sess, o, rng):
+    kind = o[0]
+    if kind == "bump":
+        name = o[1]
+        if name in sess.ns:
+            sess.run("bump", name=name)
+            return True
+    elif kind == "rebind_same":
+        name = o[1]
+        if name in sess.ns:
+            sess.run("rebind_same", name=name)
+            return True
+    elif kind == "create":
+        sess.run("create", name=o[1], value=float(rng.integers(0, 100)))
+        return True
+    elif kind == "delete":
+        name = o[1]
+        if name in sess.ns and len(sess.ns) > 1:
+            sess.run("delete", name=name)
+            return True
+    elif kind == "alias":
+        src, dst = o[1], o[2]
+        if src in sess.ns and src != dst:
+            sess.run("alias", src=src, dst=dst)
+            return True
+    return False
+
+
+@settings(max_examples=20, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow,
+                                 HealthCheck.data_too_large])
+@given(st.lists(op, min_size=3, max_size=12), st.integers(0, 2**16))
+def test_random_sessions_invariants(ops, seed):
+    rng = np.random.default_rng(seed)
+    sess = KishuSession(MemoryStore(), chunk_bytes=256)
+
+    def bump(ns, name):
+        ns[name] = ns[name] + 1.0
+
+    def rebind_same(ns, name):
+        ns[name] = ns[name].copy()
+
+    def create(ns, name, value):
+        ns[name] = np.full(37, value, np.float32)
+
+    def delete(ns, name):
+        del ns[name]
+
+    def alias(ns, src, dst):
+        ns[dst] = ns[src]
+
+    for n, f in [("bump", bump), ("rebind_same", rebind_same),
+                 ("create", create), ("delete", delete), ("alias", alias)]:
+        sess.register(n, f)
+
+    sess.init_state({n: np.arange(41, dtype=np.float32) + i
+                     for i, n in enumerate(NAMES)})
+    snapshots = {sess.head: _snapshot(sess.ns)}
+    commits = [sess.head]
+
+    for o in ops:
+        if o[0] == "checkout":
+            target = commits[o[1] % len(commits)]
+            sess.checkout(target)
+            # P1: bit-exact restoration
+            want = snapshots[target]
+            got = _snapshot(sess.ns)
+            assert set(got) == set(want), (sorted(got), sorted(want))
+            for k in want:
+                assert np.array_equal(got[k], want[k]), k
+        else:
+            before = _snapshot(sess.ns)
+            if not _apply(sess, o, rng):
+                continue
+            commits.append(sess.head)
+            snapshots[sess.head] = _snapshot(sess.ns)
+            # P2: no false negatives — every name whose value changed must be
+            # covered by an updated co-variable in this commit
+            node = sess.graph.nodes[sess.head]
+            updated_names = set()
+            for ks in node.manifests:
+                updated_names.update(parse_key(ks))
+            after = snapshots[sess.head]
+            for name in after:
+                if name not in before or \
+                        not np.array_equal(np.asarray(after[name]),
+                                           np.asarray(before[name])):
+                    assert name in updated_names, \
+                        f"false negative: {name} changed but not in delta"
+
+    # P3: index diff == Def-6 LCA for all commit pairs (sampled)
+    pairs = [(commits[i], commits[j])
+             for i in range(0, len(commits), 3)
+             for j in range(0, len(commits), 4)]
+    for a, b in pairs[:12]:
+        plan = sess.graph.diff(a, b)
+        for k in plan.identical:
+            assert sess.graph.identical_via_lca(k, a, b)
+        for k in plan.to_load:
+            assert not sess.graph.identical_via_lca(k, a, b)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(1, 5), st.integers(0, 2**16))
+def test_p4_idempotent_storage(n_repeats, seed):
+    """Re-running a command that recreates identical data adds no chunks."""
+    sess = KishuSession(MemoryStore(), chunk_bytes=512)
+
+    def recreate(ns):
+        ns["x"] = np.arange(300, dtype=np.float32)   # same every time
+    sess.register("recreate", recreate)
+    sess.init_state({})
+    sess.run("recreate")
+    chunks_after_first = sess.store.n_chunks()
+    for _ in range(n_repeats):
+        sess.run("recreate")
+    assert sess.store.n_chunks() == chunks_after_first
+
+
+@settings(max_examples=10, deadline=None)
+@given(st.integers(2, 6))
+def test_chunk_dedup_across_branches(n_branches):
+    """Branches sharing data store it once (content addressing)."""
+    sess = KishuSession(MemoryStore(), chunk_bytes=1024)
+
+    def seed_data(ns):
+        ns["shared"] = np.ones(5000, np.float32)
+
+    def tweak(ns, i):
+        ns["small"] = np.full(10, float(i), np.float32)
+
+    sess.register("seed_data", seed_data)
+    sess.register("tweak", tweak)
+    sess.init_state({})
+    root = sess.run("seed_data")
+    bytes_base = sess.store.chunk_bytes_total()
+    for i in range(n_branches):
+        sess.checkout(root)
+        sess.run("tweak", i=i)
+    extra = sess.store.chunk_bytes_total() - bytes_base
+    assert extra < 2000 * n_branches      # only the small arrays, never shared

@@ -1,0 +1,124 @@
+"""ManagedTrainingSession integration: tied-embedding aliasing, undo, branch,
+hparam deltas, async checkpointing, crash resume."""
+import numpy as np
+import pytest
+
+import jax
+
+from repro.core import MemoryStore
+from repro.models import get_config
+from repro.models.testing import reduced
+from repro.optim.adamw import AdamWConfig
+from repro.train.loop import ManagedTrainingSession, resume
+
+
+@pytest.fixture(scope="module")
+def tied_cfg():
+    return reduced(get_config("qwen3-1.7b"), n_layers=2)
+
+
+def make_sess(cfg, store=None, **kw):
+    return ManagedTrainingSession(cfg, AdamWConfig(lr=1e-3),
+                                  store or MemoryStore(),
+                                  global_batch=2, seq_len=16, **kw)
+
+
+def test_tied_embedding_covariable(tied_cfg):
+    s = make_sess(tied_cfg)
+    s.attach(seed=0)
+    key = tuple(sorted(["state/params/embed", "state/params/lm_head"]))
+    assert key in s.kishu.covs
+    assert s.ns["state/params/embed"] is s.ns["state/params/lm_head"]
+
+
+def test_undo_restores_exact_params_and_tie(tied_cfg):
+    s = make_sess(tied_cfg)
+    s.attach(seed=0)
+    c1 = s.train(2)
+    w1 = np.asarray(s.ns["state/params/embed"]).copy()
+    s.train(2)
+    st = s.checkout(c1)
+    assert np.array_equal(np.asarray(s.ns["state/params/embed"]), w1)
+    assert s.ns["state/params/embed"] is s.ns["state/params/lm_head"], \
+        "checkout broke weight tying"
+    assert st.wall_s < 5.0
+
+
+def test_hparam_delta_is_tiny(tied_cfg):
+    s = make_sess(tied_cfg)
+    s.attach(seed=0)
+    s.train(1)
+    s.set_lr(5e-4)
+    assert s.kishu.last_run.covs_updated == 1
+    assert s.kishu.last_run.write.bytes_written < 200
+
+
+def test_branching_data_mixture(tied_cfg):
+    s = make_sess(tied_cfg)
+    s.attach(seed=0)
+    c1 = s.train(1)
+    s.swap_data(seed=100)
+    s.train(1)
+    la = np.asarray(s.ns["state/params/embed"]).copy()
+    s.checkout(c1)
+    s.swap_data(seed=200)
+    s.train(1)
+    lb = np.asarray(s.ns["state/params/embed"])
+    assert not np.array_equal(la, lb)     # different mixtures diverge
+
+
+def test_train_replay_determinism(tied_cfg):
+    """The same phase from the same state gives bit-identical results —
+    the foundation of fallback recomputation for training states."""
+    s = make_sess(tied_cfg)
+    s.attach(seed=0)
+    c1 = s.train(2)
+    w_first = np.asarray(s.ns["state/params/embed"]).copy()
+    s.checkout(s.kishu.graph.nodes[c1].parent)
+    s.train(2)
+    assert np.array_equal(np.asarray(s.ns["state/params/embed"]), w_first)
+
+
+def test_chunk_loss_during_training_falls_back(tied_cfg):
+    store = MemoryStore()
+    s = make_sess(tied_cfg, store=store)
+    s.attach(seed=0)
+    c1 = s.train(1)
+    w1 = np.asarray(s.ns["state/params/embed"]).copy()
+    s.train(1)
+    man = s.kishu.graph.manifest_of(
+        tuple(sorted(["state/params/embed", "state/params/lm_head"])), c1)
+    for ch in man["base"]["chunks"]:
+        store.delete_chunk(ch["key"])
+    s.checkout(c1)
+    assert np.array_equal(np.asarray(s.ns["state/params/embed"]), w1)
+    assert s.kishu.restorer.replays >= 1
+
+
+def test_async_checkpointing(tied_cfg):
+    s = make_sess(tied_cfg, async_write=True)
+    s.attach(seed=0)
+    c1 = s.train(1)
+    s.train(1)
+    s.checkout(c1)               # flushes the writer first
+    assert s.ns is not None
+    s.close()
+
+
+def test_crash_resume(tied_cfg):
+    store = MemoryStore()
+    s = make_sess(tied_cfg, store=store)
+    s.attach(seed=0)
+    s.train(2)
+    s.set_lr(7e-4)
+    head = s.kishu.head
+    w = np.asarray(s.ns["state/params/embed"]).copy()
+    s.close()
+    del s
+    s2 = resume(reduced(get_config("qwen3-1.7b"), n_layers=2),
+                AdamWConfig(lr=1e-3), store, global_batch=2, seq_len=16)
+    assert s2.kishu.head == head
+    assert np.array_equal(np.asarray(s2.ns["state/params/embed"]), w)
+    assert s2.ns["hparams/lr"] == 7e-4
+    assert s2.ns["state/params/embed"] is s2.ns["state/params/lm_head"]
+    s2.train(1)                  # continues fine
