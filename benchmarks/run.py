@@ -35,6 +35,15 @@ def bench_ckpt(quick: bool):
     return b.rows(b.run(workloads=workloads))
 
 
+def bench_ckpt_io(quick: bool):
+    """Parallel chunk engine: serial vs parallel checkout per backend."""
+    from benchmarks import bench_ckpt as b
+    if quick:
+        return b.run_checkout_io(n_covs=8, elems=1 << 17,
+                                 chunk_bytes=1 << 16, repeats=2)
+    return b.run_checkout_io()
+
+
 def bench_tracking(quick: bool):
     """Table 6 / Fig 17 (tracking overhead)."""
     from benchmarks import bench_tracking as b
@@ -48,9 +57,17 @@ def bench_covar_sweep(quick: bool):
 
 
 def bench_scalability(quick: bool):
-    """Fig 19 (graph growth + diff time)."""
+    """Fig 19 (graph growth + diff time) + checkout wall vs distance."""
+    import tempfile
+
     from benchmarks import bench_scalability as b
-    return b.run(n_commits=200 if quick else 1000)
+    # graph/diff scaling on the memory store (backend-agnostic metadata);
+    # checkout timing on sqlite, a backend the parallel engine engages
+    rows = b.run(n_commits=200 if quick else 1000, checkout_rows=False)
+    with tempfile.TemporaryDirectory(prefix="kishu_scal_") as tmp:
+        rows += b.run(n_commits=200 if quick else 400,
+                      store_uri=f"sqlite://{tmp}/scal.db", graph_rows=False)
+    return rows
 
 
 def bench_compat(quick: bool):
@@ -85,6 +102,7 @@ def bench_roofline(quick: bool):
 
 ALL = {
     "ckpt": bench_ckpt,
+    "ckpt_io": bench_ckpt_io,
     "tracking": bench_tracking,
     "covar_sweep": bench_covar_sweep,
     "scalability": bench_scalability,

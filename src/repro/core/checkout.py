@@ -5,15 +5,23 @@ via the Checkpoint Graph index (Def 6), load *only* those from their
 manifests, reconstruct shared references (aliases/views), and swap them into
 the live namespace without touching identical co-variables.  Missing or
 corrupt data falls back to recomputation (restore.py).
+
+Chunk I/O is planned up front and executed by the parallel engine
+(parallel.py, DESIGN.md §9): all chunk keys of the diff plan are deduplicated
+into cov-ordered slabs, fetched with bounded concurrency, and each
+co-variable is deserialized/materialized on the calling thread the moment its
+last chunk lands — restore latency tracks store bandwidth, not per-chunk
+round-trips.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core import parallel
 from repro.core.chunkstore import ChunkStore
 from repro.core.covariable import CovKey, LeafRecord
 from repro.core.graph import CheckpointGraph, CheckoutPlan, key_str
@@ -33,11 +41,14 @@ class CheckoutStats:
 
 
 def materialize_manifest(store: ChunkStore, manifest: dict,
-                         stats: Optional[CheckoutStats] = None
+                         stats: Optional[CheckoutStats] = None,
+                         chunks: Optional[Dict[str, bytes]] = None
                          ) -> Dict[str, Any]:
     """Load a co-variable's values from its manifest.
 
     Reconstructs shared references: one base buffer, members as views/aliases.
+    ``chunks`` is an optional prefetched cache; keys absent from it are
+    re-tried against the store (covers async-writer races) before failing.
     Raises ChunkMissingError / SerializationError on failure (-> fallback).
     """
     if manifest.get("unserializable"):
@@ -45,7 +56,9 @@ def materialize_manifest(store: ChunkStore, manifest: dict,
     base_info = manifest["base"]
     parts = []
     for c in base_info["chunks"]:
-        data = store.get_chunk(c["key"])
+        data = chunks.get(c["key"]) if chunks is not None else None
+        if data is None:
+            data = store.get_chunk(c["key"])
         if len(data) != c["n"]:
             raise ChunkMissingError(f"chunk {c['key']}: size mismatch")
         parts.append(data)
@@ -89,10 +102,24 @@ def records_from_manifest(manifest: dict, values: Dict[str, Any]
 
 class StateLoader:
     def __init__(self, graph: CheckpointGraph, store: ChunkStore,
-                 fallback=None):
+                 fallback=None, *, io_threads: Optional[int] = None):
         self.graph = graph
         self.store = store
         self.fallback = fallback      # callable (key, version, stats) -> values
+        # <=1 forces the serial pre-engine path (benchmark baseline).
+        self.io_threads = parallel.resolve_io_threads(io_threads)
+        # Adaptive engagement (see parallel.py): first-slab latency below
+        # the gate stays serial outright; above it a measured trial decides.
+        # probe_threshold_s = 0.0 forces the pipeline; inf forces serial.
+        self.probe_threshold_s = parallel.PARALLEL_LATENCY_THRESHOLD_S
+
+    @staticmethod
+    def _fetch_parallel(slabs, fetch, consume, workers):
+        """Stream ``slabs`` through the prefetch pipeline; returns [] (all
+        consumed) so callers can fall through to the serial remainder."""
+        for slab, got in parallel.prefetch_map(fetch, slabs, workers):
+            consume(slab, got)
+        return []
 
     def load_cov(self, key: CovKey, version: str,
                  stats: Optional[CheckoutStats] = None) -> Dict[str, Any]:
@@ -109,6 +136,158 @@ class StateLoader:
             stats.covs_recomputed += 1
         return self.fallback(key, version, stats)
 
+    def load_covs(self, items: Sequence[Tuple[CovKey, str]],
+                  stats: Optional[CheckoutStats] = None, *,
+                  use_fallback: bool = True
+                  ) -> Dict[CovKey, Dict[str, Any]]:
+        """Load many versioned co-variables through the parallel engine.
+
+        Plans every chunk key up front (deduplicated across co-variables —
+        content addressing means branches share chunks), streams cov-ordered
+        slabs through a bounded-concurrency prefetch pipeline, and
+        materializes each co-variable on the calling thread as soon as its
+        last chunk arrives, overlapping deserialization with in-flight I/O.
+
+        Per-cov failures (missing/corrupt chunks, unserializable manifests)
+        degrade to the serial ``load_cov`` path, which recomputes via
+        ``fallback``.  With ``use_fallback=False`` failed co-variables are
+        omitted from the result instead (the Data Restorer drives its own
+        recursion bookkeeping).
+        """
+        out: Dict[CovKey, Dict[str, Any]] = {}
+        retry: List[Tuple[CovKey, str]] = []    # -> serial/fallback path
+        cache: Dict[str, bytes] = {}            # prefetched chunks
+        ready: List[Tuple[CovKey, str, dict, List[str]]] = []
+        for key, version in items:
+            manifest = self.graph.manifest_of(key, version)
+            if manifest is None or manifest.get("unserializable"):
+                retry.append((key, version))
+            else:
+                ready.append((key, version, manifest,
+                              [c["key"] for c in manifest["base"]["chunks"]]))
+
+        workers = self.io_threads \
+            if getattr(self.store, "supports_parallel_get", True) else 1
+        if workers <= 1 or len(ready) == 0:
+            for key, version, _, _ in ready:
+                retry.append((key, version))
+            retry.sort()
+        else:
+            # chunk key -> indices of covs waiting on it (cov order kept)
+            owners: Dict[str, List[int]] = {}
+            pending = []
+            for i, (_, _, _, cks) in enumerate(ready):
+                uniq = set(cks)
+                pending.append(len(uniq))
+                for ck in uniq:
+                    owners.setdefault(ck, []).append(i)
+            unique_keys = list(owners)
+            # refs: covs not yet finished per chunk key — once a key's last
+            # owner materializes its bytes are evicted from the cache, so
+            # peak memory is bounded by in-flight covs, not the whole
+            # restore.  Keys of *failed* covs stay pinned for the retry.
+            refs = {ck: len(own) for ck, own in owners.items()}
+            pinned: set = set()
+
+            def fetch(slab):
+                # serial_section: the engine owns concurrency (slabs across
+                # pool threads); the backend must not nest its own pool.
+                with parallel.serial_section():
+                    return slab, self.store.get_chunks(slab, missing_ok=True)
+
+            def finish(i):
+                key, version, manifest, cks = ready[i]
+                try:
+                    out[key] = materialize_manifest(self.store, manifest,
+                                                    stats, chunks=cache)
+                except (ChunkMissingError, SerializationError):
+                    retry.append((key, version))
+                    pinned.update(cks)
+                for ck in set(cks):
+                    refs[ck] -= 1
+                    if refs[ck] == 0 and ck not in pinned:
+                        cache.pop(ck, None)
+
+            def consume(slab, got):
+                cache.update(got)
+                for ck in slab:      # missing keys count as resolved: the
+                    for i in owners[ck]:   # cov will fail -> fallback
+                        pending[i] -= 1
+                        if pending[i] == 0:
+                            finish(i)
+
+            for i, n in enumerate(pending):
+                if n == 0:           # chunkless manifest (empty buffer)
+                    finish(i)
+
+            slabs = list(parallel.iter_slabs(
+                unique_keys,
+                max(getattr(self.store, "min_slab", 1),
+                    parallel.slab_size_for(len(unique_keys), workers))))
+            # Adaptive engagement: bandwidth-bound stores (warm cache,
+            # RAM-speed media) stay serial — a pipeline only adds
+            # contention; round-trip-bound stores engage it after a
+            # measured trial.
+            if slabs:
+                # Slab 0 absorbs cold-start effects (cache revalidation,
+                # first touch) so the probe compares steady-state rates.
+                consume(*fetch(slabs[0]))
+                rest = slabs[1:]
+                if self.probe_threshold_s <= 0:     # forced pipeline
+                    rest = self._fetch_parallel(rest, fetch, consume, workers)
+                elif rest:
+                    # Probe: one slab on the calling thread, timed.
+                    t0 = time.perf_counter()
+                    slab1, got1 = fetch(rest[0])
+                    dt = max(time.perf_counter() - t0, 1e-9)
+                    consume(slab1, got1)
+                    per_chunk_serial = dt / max(1, len(slab1))
+                    rest = rest[1:]
+                    if per_chunk_serial >= self.probe_threshold_s and rest:
+                        # Slow store: trial a few slabs concurrently and
+                        # keep the pipeline only if its measured rate beats
+                        # serial by a clear margin (high-latency transports
+                        # that *serialize* concurrency lose the trial).
+                        # Timed around the fetches only — the serial probe
+                        # above excludes consume() too.
+                        trial, rest = rest[:workers], rest[workers:]
+                        t0 = time.perf_counter()
+                        trial_got = parallel.map_parallel(
+                            lambda s: fetch(s)[1], trial, workers)
+                        dt2 = max(time.perf_counter() - t0, 1e-9)
+                        for slab, got in zip(trial, trial_got):
+                            consume(slab, got)
+                        per_chunk_par = dt2 \
+                            / max(1, sum(len(s) for s in trial))
+                        if per_chunk_par <= per_chunk_serial \
+                                * parallel.PARALLEL_TRIAL_MARGIN:
+                            rest = self._fetch_parallel(rest, fetch, consume,
+                                                        workers)
+                for slab in rest:                   # serial remainder
+                    consume(*fetch(slab))
+
+        for key, version in retry:
+            manifest = self.graph.manifest_of(key, version)
+            if manifest is not None and not manifest.get("unserializable"):
+                try:
+                    # reuse prefetched chunks; absent keys retry the store
+                    out[key] = materialize_manifest(
+                        self.store, manifest, stats,
+                        chunks=cache if cache else None)
+                    continue
+                except (ChunkMissingError, SerializationError):
+                    pass
+            if not use_fallback:
+                continue
+            if self.fallback is None:
+                raise ChunkMissingError(
+                    f"co-variable {key} @ {version} unavailable and no "
+                    f"fallback")
+            if stats:
+                stats.covs_recomputed += 1
+            out[key] = self.fallback(key, version, stats)
+        return out
+
     def checkout(self, tracked_ns, records: Dict[str, LeafRecord],
                  target: str) -> Tuple[Dict[str, LeafRecord], CheckoutStats]:
         """Execute an incremental checkout; mutates the namespace in place.
@@ -122,10 +301,9 @@ class StateLoader:
         stats.diff_s = time.perf_counter() - td
         stats.covs_identical = len(plan.identical)
 
-        # 1. load diverged co-variables (before mutating anything)
-        loaded: Dict[CovKey, Dict[str, Any]] = {}
-        for key, version in sorted(plan.to_load.items()):
-            loaded[key] = self.load_cov(key, version, stats)
+        # 1. load diverged co-variables (before mutating anything),
+        #    chunk I/O planned up front and prefetched in parallel
+        loaded = self.load_covs(sorted(plan.to_load.items()), stats)
 
         # 2. swap into the namespace (tracking paused: checkout is not access)
         new_records = dict(records)
@@ -163,12 +341,14 @@ class StateLoader:
         t0 = time.perf_counter()
         from repro.core.graph import parse_key
         index = self.graph.nodes[target].state_index
+        items = [(parse_key(ks), version)
+                 for ks, version in sorted(index.items())]
+        loaded = self.load_covs(items, stats)
+        versions = dict(items)
         new_records: Dict[str, LeafRecord] = {}
         with tracked_ns.pause():
-            for ks, version in sorted(index.items()):
-                key = parse_key(ks)
-                values = self.load_cov(key, version, stats)
-                manifest = self.graph.manifest_of(key, version)
+            for key, values in loaded.items():
+                manifest = self.graph.manifest_of(key, versions[key])
                 for name, val in values.items():
                     tracked_ns.base[name] = val
                 if manifest is not None and not manifest.get("unserializable"):

@@ -54,8 +54,15 @@ def build_manifest(store: ChunkStore, key: CovKey,
                    chunk_bytes: int,
                    prev_manifest: Optional[dict],
                    stats: WriteStats,
-                   put: Callable[[str, bytes], None]) -> dict:
-    """Serialize one co-variable into a manifest + chunk puts."""
+                   put: Callable[[str, bytes], None],
+                   has: Optional[Callable[[str], bool]] = None) -> dict:
+    """Serialize one co-variable into a manifest + chunk puts.
+
+    ``has`` is the CAS-dedup membership test; the writer passes a variant
+    that also sees chunks batched/enqueued but not yet landed in the store,
+    so deferred (batched or async) puts never double-write within a delta."""
+    if has is None:
+        has = store.has_chunk
     members = []
     for r in records:
         members.append({"name": r.name, "kind": r.kind, "dtype": r.dtype,
@@ -96,7 +103,7 @@ def build_manifest(store: ChunkStore, key: CovKey,
             continue
         data = blob[lo:hi]
         ck = chunk_key(data)
-        if store.has_chunk(ck):
+        if has(ck):
             stats.chunks_dedup += 1
         else:
             put(ck, data)
@@ -110,15 +117,26 @@ def build_manifest(store: ChunkStore, key: CovKey,
 
 
 class CheckpointWriter:
-    """Sync or async (background-thread) chunk writer."""
+    """Sync or async (background-thread) chunk writer.
+
+    Both modes route through the batched ``put_chunks`` backend op: the sync
+    path accumulates a delta's new chunks and lands them in one batch (one
+    SQLite transaction / one thread-pooled file sweep) before the commit
+    returns; the async worker drains its queue in batches of up to
+    ``drain_batch`` for the same amortization without changing the
+    deadline/straggler semantics."""
 
     def __init__(self, store: ChunkStore, *, chunk_bytes: int = 1 << 20,
-                 async_write: bool = False, write_deadline_s: float = 0.0):
+                 async_write: bool = False, write_deadline_s: float = 0.0,
+                 drain_batch: int = 64):
         self.store = store
         self.chunk_bytes = chunk_bytes
         self.async_write = async_write
         self.write_deadline_s = write_deadline_s
+        self.drain_batch = drain_batch
         self._q: "queue.Queue" = queue.Queue()
+        self._batch: List[Tuple[str, bytes]] = []     # sync-mode delta batch
+        self._batch_keys: set = set()
         self._worker: Optional[threading.Thread] = None
         self._errors: List[Exception] = []
         self.pending_keys: set = set()
@@ -131,21 +149,57 @@ class CheckpointWriter:
             item = self._q.get()
             if item is None:
                 return
-            ck, data = item
+            batch = [item]
+            saw_sentinel = False
+            while len(batch) < self.drain_batch:
+                try:
+                    nxt = self._q.get_nowait()
+                except queue.Empty:
+                    break
+                if nxt is None:
+                    saw_sentinel = True
+                    break
+                batch.append(nxt)
             try:
-                self.store.put_chunk(ck, data)
-            except Exception as e:  # noqa: BLE001
-                self._errors.append(e)
+                try:
+                    self.store.put_chunks(batch)
+                except Exception:  # noqa: BLE001
+                    # batch op failed somewhere: degrade to per-chunk puts
+                    # so one bad chunk doesn't drop its whole batch
+                    for ck, data in batch:
+                        try:
+                            self.store.put_chunk(ck, data)
+                        except Exception as e:  # noqa: BLE001
+                            self._errors.append(e)
             finally:
-                self.pending_keys.discard(ck)
-                self._q.task_done()
+                for ck, _ in batch:
+                    self.pending_keys.discard(ck)
+                for _ in batch:
+                    self._q.task_done()
+            if saw_sentinel:
+                return
 
     def _put(self, ck: str, data: bytes) -> None:
         if self.async_write:
             self.pending_keys.add(ck)
             self._q.put((ck, bytes(data)))
         else:
-            self.store.put_chunk(ck, data)
+            self._batch.append((ck, bytes(data)))
+            self._batch_keys.add(ck)
+            if len(self._batch) >= self.drain_batch:
+                self._flush_batch()      # bound buffered delta memory
+
+    def _flush_batch(self) -> None:
+        if not self._batch:
+            return
+        batch, self._batch = self._batch, []
+        self._batch_keys = set()
+        self.store.put_chunks(batch)
+
+    def _has(self, ck: str) -> bool:
+        """CAS membership including chunks deferred in this delta."""
+        return (ck in self.pending_keys or ck in self._batch_keys
+                or self.store.has_chunk(ck))
 
     def write_delta(self, delta, ns,
                     prev_manifest_of: Callable[[CovKey], Optional[dict]]
@@ -156,8 +210,9 @@ class CheckpointWriter:
         for key, records in delta.updated.items():
             man = build_manifest(self.store, key, records, ns,
                                  self.chunk_bytes, prev_manifest_of(key),
-                                 stats, self._put)
+                                 stats, self._put, self._has)
             manifests[key_str(key)] = man
+        self._flush_batch()                  # sync mode: durable on return
         if self.async_write and self.write_deadline_s:
             deadline = time.time() + self.write_deadline_s
             while self.pending_keys and time.time() < deadline:

@@ -23,8 +23,9 @@ import os
 import sqlite3
 import threading
 import time
-from typing import Dict, Iterable, List, Optional
+from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
+from repro.core import parallel
 from repro.core.serialize import ChunkMissingError
 
 
@@ -33,7 +34,26 @@ def chunk_key(data: bytes) -> str:
 
 
 class ChunkStore:
-    """Interface: immutable chunks + small JSON metadata documents."""
+    """Interface: immutable chunks + small JSON metadata documents.
+
+    Besides the per-chunk primitives, backends implement *batched* operations
+    (``get_chunks`` / ``put_chunks`` / ``list_chunk_keys``) natively — one
+    transaction for SQLite, a thread pool for the directory store — which the
+    parallel I/O engine (parallel.py, DESIGN.md §9) and GC build on.  The
+    base-class defaults degrade to per-chunk loops, so wrappers that inject
+    per-chunk behavior (faults, delays) inherit correct pass-through
+    semantics for free.
+
+    Engine hints (class attributes):
+      - ``supports_parallel_get``: False when concurrent fetches cannot beat
+        a direct loop (pure in-memory stores have no round-trip to hide);
+        the checkout pipeline then takes the serial path.
+      - ``min_slab``: minimum keys per batched fetch — backends with
+        per-statement overhead (SQL) want large slabs to amortize it.
+    """
+
+    supports_parallel_get = True
+    min_slab = 1
 
     def put_chunk(self, key: str, data: bytes) -> bool:
         raise NotImplementedError
@@ -43,6 +63,45 @@ class ChunkStore:
 
     def has_chunk(self, key: str) -> bool:
         raise NotImplementedError
+
+    # ---- batched ops (parallel engine + GC entry points) ----
+    def get_chunks(self, keys: Sequence[str], *,
+                   missing_ok: bool = False) -> Dict[str, bytes]:
+        """Fetch many chunks; returns {key: data}.  With ``missing_ok``
+        absent chunks are simply omitted, else ChunkMissingError."""
+        out: Dict[str, bytes] = {}
+        for k in keys:
+            if k in out:
+                continue
+            try:
+                out[k] = self.get_chunk(k)
+            except ChunkMissingError:
+                if not missing_ok:
+                    raise
+        return out
+
+    def put_chunks(self, pairs: Sequence[Tuple[str, bytes]]) -> int:
+        """Store many chunks; returns the number newly written."""
+        written = 0
+        for k, d in pairs:
+            if self.put_chunk(k, d):
+                written += 1
+        return written
+
+    def list_chunk_keys(self) -> List[str]:
+        """All chunk keys currently stored (GC / fsck enumeration)."""
+        raise NotImplementedError
+
+    def chunk_sizes(self, keys: Sequence[str]) -> Dict[str, int]:
+        """Byte size per existing chunk (missing keys omitted) — metadata
+        only where the backend allows, for GC accounting."""
+        out: Dict[str, int] = {}
+        for k in keys:
+            try:
+                out[k] = len(self.get_chunk(k))
+            except ChunkMissingError:
+                pass
+        return out
 
     def put_meta(self, name: str, doc: dict) -> None:
         raise NotImplementedError
@@ -65,6 +124,8 @@ class ChunkStore:
 
 
 class MemoryStore(ChunkStore):
+    supports_parallel_get = False     # dict access: no latency to overlap
+
     def __init__(self):
         self.chunks: Dict[str, bytes] = {}
         self.meta: Dict[str, dict] = {}
@@ -84,6 +145,22 @@ class MemoryStore(ChunkStore):
             return self.chunks[key]
         except KeyError:
             raise ChunkMissingError(key) from None
+
+    def get_chunks(self, keys, *, missing_ok=False):
+        chunks = self.chunks
+        if missing_ok:
+            return {k: chunks[k] for k in keys if k in chunks}
+        try:
+            return {k: chunks[k] for k in keys}
+        except KeyError as e:
+            raise ChunkMissingError(e.args[0]) from None
+
+    def list_chunk_keys(self):
+        return list(self.chunks)
+
+    def chunk_sizes(self, keys):
+        chunks = self.chunks
+        return {k: len(chunks[k]) for k in keys if k in chunks}
 
     def has_chunk(self, key):
         return key in self.chunks
@@ -137,6 +214,42 @@ class DirectoryStore(ChunkStore):
     def has_chunk(self, key):
         return os.path.exists(self._chunk_path(key))
 
+    def get_chunks(self, keys, *, missing_ok=False):
+        # Thread-pooled reads: each open/read releases the GIL in the
+        # syscall, so concurrent chunk files stream in parallel.
+        def read_one(key):
+            try:
+                return key, self.get_chunk(key)
+            except ChunkMissingError:
+                if not missing_ok:
+                    raise
+                return key, None
+        uniq = list(dict.fromkeys(keys))
+        got = parallel.map_parallel(read_one, uniq)
+        return {k: v for k, v in got if v is not None}
+
+    def put_chunks(self, pairs):
+        def write_one(pair):
+            return self.put_chunk(pair[0], pair[1])
+        return sum(bool(w) for w in parallel.map_parallel(write_one,
+                                                          list(pairs)))
+
+    def list_chunk_keys(self):
+        out = []
+        for _, _, files in os.walk(os.path.join(self.root, "chunks")):
+            out.extend(f for f in files if not f.endswith(".tmp")
+                       and ".tmp." not in f)
+        return out
+
+    def chunk_sizes(self, keys):
+        out = {}
+        for k in keys:
+            try:
+                out[k] = os.path.getsize(self._chunk_path(k))
+            except FileNotFoundError:
+                pass
+        return out
+
     def delete_chunk(self, key):
         try:
             os.remove(self._chunk_path(key))
@@ -180,6 +293,8 @@ class DirectoryStore(ChunkStore):
 
 
 class SQLiteStore(ChunkStore):
+    min_slab = 32                     # amortize per-SELECT overhead
+
     def __init__(self, path: str):
         self.path = path
         self._local = threading.local()
@@ -212,6 +327,53 @@ class SQLiteStore(ChunkStore):
     def has_chunk(self, key):
         return self._con().execute(
             "SELECT 1 FROM chunks WHERE key=?", (key,)).fetchone() is not None
+
+    # IN-clause batch bound: SQLite's default variable limit is 999.
+    _SQL_BATCH = 500
+
+    def get_chunks(self, keys, *, missing_ok=False):
+        uniq = list(dict.fromkeys(keys))
+        con = self._con()
+        out: Dict[str, bytes] = {}
+        for i in range(0, len(uniq), self._SQL_BATCH):
+            part = uniq[i:i + self._SQL_BATCH]
+            marks = ",".join("?" * len(part))
+            rows = con.execute(
+                f"SELECT key, data FROM chunks WHERE key IN ({marks})", part)
+            for k, d in rows:
+                out[k] = bytes(d)
+        if not missing_ok and len(out) != len(uniq):
+            missing = next(k for k in uniq if k not in out)
+            raise ChunkMissingError(missing)
+        return out
+
+    def put_chunks(self, pairs):
+        # One transaction for the whole batch: a single fsync instead of one
+        # per chunk — the dominant cost of the serial write path.
+        con = self._con()
+        before = con.total_changes
+        con.executemany(
+            "INSERT OR IGNORE INTO chunks VALUES (?, ?)",
+            [(k, sqlite3.Binary(d)) for k, d in pairs])
+        con.commit()
+        return con.total_changes - before
+
+    def list_chunk_keys(self):
+        return [r[0] for r in self._con().execute("SELECT key FROM chunks")]
+
+    def chunk_sizes(self, keys):
+        uniq = list(dict.fromkeys(keys))
+        con = self._con()
+        out: Dict[str, int] = {}
+        for i in range(0, len(uniq), self._SQL_BATCH):
+            part = uniq[i:i + self._SQL_BATCH]
+            marks = ",".join("?" * len(part))
+            rows = con.execute(
+                f"SELECT key, LENGTH(data) FROM chunks"
+                f" WHERE key IN ({marks})", part)
+            for k, n in rows:
+                out[k] = int(n)
+        return out
 
     def delete_chunk(self, key):
         con = self._con()
@@ -249,19 +411,34 @@ class SQLiteStore(ChunkStore):
 # ---------------------------------------------------------------------------
 
 class FaultInjectedStore(ChunkStore):
-    """Wrapper that drops/corrupts selected chunks and can delay writes.
+    """Wrapper that drops/corrupts selected chunks and can delay I/O.
 
     ``fail_get``: predicate(key) -> bool — raise ChunkMissingError on read.
     ``write_delay``: seconds added per put (straggler simulation).
+    ``read_delay``: seconds added per get (slow-host restore simulation).
+
+    Batched ops are deliberately *not* overridden: the ChunkStore defaults
+    loop through ``get_chunk``/``put_chunk`` here, so every chunk of a batch
+    individually passes through the fault predicates and delays — the
+    parallel engine is exercised against per-chunk failures, not
+    batch-granularity ones.
     """
 
     def __init__(self, inner: ChunkStore, *, fail_get=None, fail_put=None,
-                 write_delay: float = 0.0):
+                 write_delay: float = 0.0, read_delay: float = 0.0):
         self.inner = inner
         self.fail_get = fail_get or (lambda k: False)
         self.fail_put = fail_put or (lambda k: False)
         self.write_delay = write_delay
+        self.read_delay = read_delay
         self.dropped_puts: List[str] = []
+        # engine hints follow the wrapped backend; an injected read delay
+        # adds a per-chunk round trip, which parallel fetch can hide even
+        # over a store that opts out (e.g. a delayed MemoryStore models a
+        # remote RAM-speed host)
+        self.min_slab = getattr(inner, "min_slab", 1)
+        self.supports_parallel_get = (
+            getattr(inner, "supports_parallel_get", True) or read_delay > 0)
 
     def put_chunk(self, key, data):
         if self.write_delay:
@@ -272,9 +449,17 @@ class FaultInjectedStore(ChunkStore):
         return self.inner.put_chunk(key, data)
 
     def get_chunk(self, key):
+        if self.read_delay:
+            time.sleep(self.read_delay)
         if self.fail_get(key):
             raise ChunkMissingError(f"injected failure: {key}")
         return self.inner.get_chunk(key)
+
+    def list_chunk_keys(self):
+        return self.inner.list_chunk_keys()
+
+    def chunk_sizes(self, keys):
+        return self.inner.chunk_sizes(keys)
 
     def has_chunk(self, key):
         return self.inner.has_chunk(key)

@@ -87,6 +87,9 @@ class CheckpointGraph:
     def _load(self) -> None:
         for name in self.store.list_meta("commit/"):
             doc = self.store.get_meta(name)
+            if not doc or doc.get("deleted") is True:
+                continue    # delete_branch tombstone ({"deleted": True});
+                            # a commit's own "deleted" field is a list
             node = CommitNode.from_doc(doc)
             self.nodes[node.commit_id] = node
         for node in self.nodes.values():
@@ -186,6 +189,19 @@ class CheckpointGraph:
 
     def manifest_of(self, key: CovKey, version: str) -> Optional[dict]:
         return self.nodes[version].manifests.get(key_str(key))
+
+    def live_chunk_keys(self) -> set:
+        """Chunk keys referenced by any live commit's manifests — the GC
+        mark set (shared by session gc and the CLI so they cannot disagree
+        on what is garbage)."""
+        live = set()
+        for node in self.nodes.values():
+            for man in node.manifests.values():
+                if man.get("unserializable"):
+                    continue
+                for c in man.get("base", {}).get("chunks", []):
+                    live.add(c["key"])
+        return live
 
     def log(self, limit: int = 0) -> List[dict]:
         out = []

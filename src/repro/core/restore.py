@@ -20,7 +20,6 @@ from typing import Any, Callable, Dict, Optional
 from repro.core.covariable import CovKey, group_covariables, RecordBuilder
 from repro.core.graph import CheckpointGraph, parse_key
 from repro.core.namespace import Namespace, TrackedNamespace
-from repro.core.serialize import ChunkMissingError
 
 
 class RestoreError(Exception):
@@ -63,13 +62,20 @@ class DataRestorer:
             if not missing:
                 return {n: temp[n] for n in key}
 
-        # 1. restore dependencies (recursively if needed)
+        # 1. restore dependencies (recursively if needed).  Dependencies
+        #    that are loadable arrive through the parallel chunk engine in
+        #    one prefetched pass (use_fallback=False: recursion depth is
+        #    bookkept here, not inside the loader); only the unavailable
+        #    remainder recurses into replay.
         temp = Namespace()
-        for dep_str, dep_version in node.accessed.items():
-            dep_key = parse_key(dep_str)
-            try:
-                values = self.loader.load_cov(dep_key, dep_version, stats)
-            except (ChunkMissingError, RestoreError):
+        dep_items = [(parse_key(s), v) for s, v in node.accessed.items()]
+        prefetched = self.loader.load_covs(dep_items, stats,
+                                           use_fallback=False)
+        for dep_key, dep_version in dep_items:
+            values = prefetched.get(dep_key)
+            if values is None:
+                if stats:
+                    stats.covs_recomputed += 1
                 values = self.recompute(dep_key, dep_version, stats,
                                         _depth + 1)
             for name, val in values.items():

@@ -51,7 +51,8 @@ class KishuSession:
                  async_write: bool = False,
                  write_deadline_s: float = 0.0,
                  check_all: bool = False,
-                 hasher=None):
+                 hasher=None,
+                 io_threads: Optional[int] = None):
         self.store = store
         self.ns = Namespace()
         self.tracked = TrackedNamespace(self.ns)
@@ -67,7 +68,7 @@ class KishuSession:
         self.last_run: Optional[RunStats] = None
         self.last_checkout: Optional[CheckoutStats] = None
 
-        self.loader = StateLoader(self.graph, store)
+        self.loader = StateLoader(self.graph, store, io_threads=io_threads)
         self.restorer = DataRestorer(self.graph, self.loader, self.registry)
         self.loader.fallback = self.restorer.recompute
 
@@ -212,32 +213,15 @@ class KishuSession:
 
     def gc(self) -> dict:
         """Content-addressed garbage collection: drop chunks referenced by
-        no live manifest (after branch deletion / history truncation)."""
-        live = set()
-        for node in self.graph.nodes.values():
-            for man in node.manifests.values():
-                if man.get("unserializable"):
-                    continue
-                for c in man.get("base", {}).get("chunks", []):
-                    live.add(c["key"])
-        dropped = 0
-        freed = 0
-        # enumerate store chunks (backend-specific; MemoryStore/Directory)
-        keys = []
-        if hasattr(self.store, "chunks"):
-            keys = list(self.store.chunks)
-        elif hasattr(self.store, "root"):
-            import os as _os
-            cdir = _os.path.join(self.store.root, "chunks")
-            for d, _, files in _os.walk(cdir):
-                keys.extend(files)
-        for k in keys:
-            if k not in live:
-                if hasattr(self.store, "chunks"):
-                    freed += len(self.store.chunks.get(k, b""))
-                self.store.delete_chunk(k)
-                dropped += 1
-        return {"chunks_dropped": dropped, "bytes_freed": freed,
+        no live manifest (after branch deletion / history truncation).
+        Enumerates through ``list_chunk_keys()``, so every backend —
+        including the single-file SQLite deployment — reclaims space."""
+        live = self.graph.live_chunk_keys()
+        dead = [k for k in self.store.list_chunk_keys() if k not in live]
+        freed = sum(self.store.chunk_sizes(dead).values())
+        for k in dead:
+            self.store.delete_chunk(k)
+        return {"chunks_dropped": len(dead), "bytes_freed": freed,
                 "chunks_live": len(live)}
 
     def storage_stats(self) -> dict:

@@ -107,29 +107,14 @@ def cmd_verify(store, graph: CheckpointGraph, args) -> int:
 
 
 def cmd_gc(store, graph: CheckpointGraph, args) -> int:
-    # session-less GC: same live-set logic as KishuSession.gc()
-    live = set()
-    for node in graph.nodes.values():
-        for man in node.manifests.values():
-            if man.get("unserializable"):
-                continue
-            for c in man.get("base", {}).get("chunks", []):
-                live.add(c["key"])
-    keys = []
-    if hasattr(store, "chunks"):
-        keys = list(store.chunks)
-    elif hasattr(store, "root"):
-        import os
-        cdir = os.path.join(store.root, "chunks")
-        for d, _, files in os.walk(cdir):
-            keys.extend(files)
-    dropped = 0
-    for k in keys:
-        if k not in live:
-            if not args.dry_run:
-                store.delete_chunk(k)
-            dropped += 1
-    print(f"gc: {'would drop' if args.dry_run else 'dropped'} {dropped} "
+    # session-less GC: the mark set is shared with KishuSession.gc(); chunk
+    # enumeration is backend-native (works on sqlite:// stores too)
+    live = graph.live_chunk_keys()
+    dead = [k for k in store.list_chunk_keys() if k not in live]
+    if not args.dry_run:
+        for k in dead:
+            store.delete_chunk(k)
+    print(f"gc: {'would drop' if args.dry_run else 'dropped'} {len(dead)} "
           f"chunks ({len(live)} live)")
     return 0
 

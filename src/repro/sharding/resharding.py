@@ -32,20 +32,20 @@ def chunks_for_range(manifest: dict, lo: int, hi: int) -> List[int]:
 def load_byte_range(store: ChunkStore, manifest: dict, lo: int, hi: int
                     ) -> bytes:
     """Assemble exactly [lo, hi) of the base buffer, reading only the
-    overlapping chunks (shard-local restore)."""
+    overlapping chunks (shard-local restore).  The overlapping chunk set is
+    planned first and fetched with the backend's batched op, so a host's
+    shard streams in at store bandwidth instead of per-chunk round-trips."""
     base = manifest["base"]
-    parts = []
+    wanted = []                      # (key, slice lo, slice hi) per chunk
     off = 0
     for c in base["chunks"]:
         if off < hi and off + c["n"] > lo:
-            data = store.get_chunk(c["key"])
-            a = max(lo - off, 0)
-            b = min(hi - off, c["n"])
-            parts.append(data[a:b])
+            wanted.append((c["key"], max(lo - off, 0), min(hi - off, c["n"])))
         off += c["n"]
         if off >= hi:
             break
-    return b"".join(parts)
+    got = store.get_chunks([k for k, _, _ in wanted])
+    return b"".join(got[k][a:b] for k, a, b in wanted)
 
 
 def host_shard_ranges(shape: Tuple[int, ...], dtype, sharding

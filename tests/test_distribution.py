@@ -8,6 +8,9 @@ import textwrap
 
 import pytest
 
+pytestmark = pytest.mark.slow    # JAX jit-heavy; fast lane: -m "not slow"
+
+
 SRC = os.path.join(os.path.dirname(__file__), "..", "src")
 
 

@@ -2,9 +2,12 @@
 import numpy as np
 import jax.numpy as jnp
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from _hypothesis_compat import given, settings, st
 
 from repro.kernels.block_diff import block_diff
+
+pytestmark = pytest.mark.slow    # JAX jit-heavy; fast lane: -m "not slow"
 
 CB = 1 << 12
 

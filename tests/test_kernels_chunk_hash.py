@@ -8,10 +8,13 @@ import jax
 import jax.numpy as jnp
 import pytest
 
+
 from repro.core import hashing as H
 from repro.kernels.chunk_hash import chunk_hash, chunk_hash_u64
 from repro.kernels.chunk_hash.kernel import chunk_hash_pallas
 from repro.kernels.chunk_hash.ref import chunk_hash_ref
+
+pytestmark = pytest.mark.slow    # JAX jit-heavy; fast lane: -m "not slow"
 
 CB = 1 << 12
 

@@ -5,7 +5,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+
 from repro.kernels.flash_attention import flash_attention
+
+pytestmark = pytest.mark.slow    # JAX jit-heavy; fast lane: -m "not slow"
 
 CASES = [
     # B, S, Hq, Hkv, hd, bq, bk, causal

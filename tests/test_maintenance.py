@@ -5,6 +5,7 @@ import numpy as np
 import pytest
 
 from repro.core import FaultInjectedStore, KishuSession, MemoryStore
+from repro.core.chunkstore import DirectoryStore, SQLiteStore
 
 
 def make_session(store=None):
@@ -15,6 +16,25 @@ def make_session(store=None):
     s.register("set_val", set_val)
     s.init_state({})
     return s
+
+
+@pytest.fixture(params=["memory", "dir", "sqlite"])
+def any_store(request, tmp_path):
+    if request.param == "memory":
+        return MemoryStore()
+    if request.param == "dir":
+        return DirectoryStore(str(tmp_path / "cas"))
+    return SQLiteStore(str(tmp_path / "cas.db"))
+
+
+def live_chunks(sess):
+    out = set()
+    for node in sess.graph.nodes.values():
+        for man in node.manifests.values():
+            if man.get("unserializable"):
+                continue
+            out.update(c["key"] for c in man["base"]["chunks"])
+    return out
 
 
 def test_diff_api():
@@ -67,6 +87,90 @@ def test_gc_keeps_shared_chunks():
     s.checkout(root)
     s.checkout(b)                            # must still load fine
     assert float(s.ns["x"][0]) == 2.0
+
+
+def test_gc_reclaims_dead_chunks_all_backends(any_store):
+    """gc() must reclaim on every backend — including SQLite, where chunk
+    enumeration historically no-oped — and must drop *exactly* the chunks
+    orphaned by the branch deletion."""
+    s = make_session(any_store)
+    s.run("set_val", name="x", val=1)
+    root = s.head
+    a1 = s.run("set_val", name="big_a", val=7)
+    a2 = s.run("set_val", name="big_a", val=8)
+    s.checkout(root)
+    b1 = s.run("set_val", name="b", val=9)
+
+    before = set(any_store.list_chunk_keys())
+    assert live_chunks(s) == before          # nothing orphaned yet
+    doomed = s.delete_branch(a2)
+    assert a1 in doomed and a2 in doomed
+    live = live_chunks(s)                    # manifests surviving deletion
+    dead = before - live
+    assert dead                              # branch A had unique data
+
+    stats = s.gc()
+    after = set(any_store.list_chunk_keys())
+    assert after == live                     # exactly the doomed reclaimed
+    assert stats["chunks_dropped"] == len(dead)
+    assert stats["bytes_freed"] > 0
+    assert stats["chunks_live"] == len(live)
+
+    s.checkout(root)                         # survivors still restore
+    s.checkout(b1)
+    assert float(np.asarray(s.ns["b"])[0]) == 9.0
+
+
+def test_gc_noop_when_no_garbage(any_store):
+    s = make_session(any_store)
+    c1 = s.run("set_val", name="x", val=1)
+    s.run("set_val", name="y", val=2)
+    stats = s.gc()
+    assert stats["chunks_dropped"] == 0 and stats["bytes_freed"] == 0
+    s.checkout(c1)
+    assert float(np.asarray(s.ns["x"])[0]) == 1.0
+
+
+def test_delete_branch_then_gc_keeps_other_branch_loadable(any_store):
+    s = make_session(any_store)
+    s.run("set_val", name="x", val=1)
+    root = s.head
+    a = s.run("set_val", name="x", val=2)    # branch A
+    s.checkout(root)
+    b = s.run("set_val", name="x", val=3)    # branch B
+    s.checkout(root)
+    s.delete_branch(a)
+    s.delete_branch(b)
+    s.gc()
+    c = s.run("set_val", name="x", val=4)
+    s.checkout(root)
+    s.checkout(c)
+    assert float(np.asarray(s.ns["x"])[0]) == 4.0
+
+
+def test_reload_after_delete_branch(any_store):
+    """delete_branch writes tombstone meta docs; re-opening the store (new
+    session / CLI) must skip them instead of crashing at graph load."""
+    s = make_session(any_store)
+    s.run("set_val", name="x", val=1)
+    root = s.head
+    a = s.run("set_val", name="x", val=2)
+    s.checkout(root)
+    b = s.run("set_val", name="x", val=3)
+    s.checkout(root)
+    doomed = s.delete_branch(a)
+    s.gc()
+    s.close()
+
+    s2 = KishuSession(any_store, chunk_bytes=1 << 10)   # reload
+    assert set(doomed).isdisjoint(s2.graph.nodes)
+    assert b in s2.graph.nodes
+
+    def set_val(ns, name, val):
+        ns[name] = np.full(1000, float(val), np.float32)
+    s2.register("set_val", set_val)
+    s2.checkout(b)
+    assert float(np.asarray(s2.ns["x"])[0]) == 3.0
 
 
 def test_cannot_delete_current_branch():

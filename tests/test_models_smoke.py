@@ -5,10 +5,13 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+
 from repro.models import get_config, list_configs, lm
 from repro.models.testing import reduced
 from repro.optim.adamw import AdamWConfig
 from repro.train import step as step_lib
+
+pytestmark = pytest.mark.slow    # JAX jit-heavy; fast lane: -m "not slow"
 
 ARCHS = ["mamba2-780m", "stablelm-12b", "smollm-360m", "mistral-nemo-12b",
          "qwen3-1.7b", "jamba-1.5-large-398b", "whisper-large-v3",

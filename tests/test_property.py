@@ -11,7 +11,7 @@ alias / unalias / branch checkout) against a model of the state, asserting:
 """
 import numpy as np
 import pytest
-from hypothesis import HealthCheck, given, settings, strategies as st
+from _hypothesis_compat import HealthCheck, given, settings, st
 
 from repro.core import KishuSession, MemoryStore, cov_key
 from repro.core.graph import parse_key

@@ -3,6 +3,7 @@ hparam deltas, async checkpointing, crash resume."""
 import numpy as np
 import pytest
 
+
 import jax
 
 from repro.core import MemoryStore
@@ -10,6 +11,8 @@ from repro.models import get_config
 from repro.models.testing import reduced
 from repro.optim.adamw import AdamWConfig
 from repro.train.loop import ManagedTrainingSession, resume
+
+pytestmark = pytest.mark.slow    # JAX jit-heavy; fast lane: -m "not slow"
 
 
 @pytest.fixture(scope="module")
