@@ -71,7 +71,10 @@ def run_checkout_io(n_covs: int = 16, elems: int = 1 << 19,
                     if backend == "memory":
                         continue        # no remote story for in-process RAM
                     store = FaultInjectedStore(store, read_delay=rtt_s)
-                sess = KishuSession(store, chunk_bytes=chunk_bytes)
+                # cache_bytes=0: this bench measures backend transport; the
+                # shared chunk cache would serve everything from memory
+                sess = KishuSession(store, chunk_bytes=chunk_bytes,
+                                    cache_bytes=0)
 
                 def step(ns, seed):
                     rng = np.random.default_rng(seed)

@@ -79,7 +79,7 @@ def run_kishu(wl: Workload, *, check_all: bool = False,
         t0 = time.perf_counter()
         st = sess.checkout(target)
         res.undo_s = time.perf_counter() - t0
-        res.undo_bytes = st.bytes_loaded
+        res.undo_bytes = st.bytes_loaded + st.bytes_cached
         sess.checkout(res.commits[-1])
 
     if branch and len(res.commits) >= 4:

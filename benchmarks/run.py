@@ -1,16 +1,43 @@
 """Benchmark driver — one function per paper table/figure.
 
     PYTHONPATH=src python -m benchmarks.run [--quick] [--only NAME]
+    PYTHONPATH=src python -m benchmarks.run --smoke      # CI delta gate
 
 Prints CSV rows (``bench,...``) per benchmark plus the roofline table from
-the dry-run artifacts (if present).
+the dry-run artifacts (if present).  The ``delta`` bench (and ``--smoke``)
+additionally writes machine-readable trajectory artifacts at the repo root —
+``BENCH_ckpt_io.json`` (checkpoint-side bytes moved vs logical) and
+``BENCH_checkout.json`` (checkout-side) — so future PRs can diff their
+numbers against this one.  ``--smoke`` asserts the delta pipeline's
+acceptance bars (>=5x fewer bytes moved on a ~10%-dirty workload,
+bit-identical restores, compression on and off) and exits non-zero on
+regression.
 """
 from __future__ import annotations
 
 import argparse
 import csv
+import json
+import os
 import sys
 import time
+
+_REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+
+def _write_bench_json(name: str, rows) -> None:
+    path = os.path.join(_REPO_ROOT, name)
+    with open(path, "w") as f:
+        json.dump({"generated_by": "benchmarks/run.py", "rows": rows},
+                  f, indent=1, sort_keys=True)
+    print(f"# wrote {path}", flush=True)
+
+
+def _emit_delta_artifacts(rows) -> None:
+    ckpt = [r for r in rows if r.get("phase") == "checkpoint"]
+    checkout = [r for r in rows if r.get("phase") == "checkout"]
+    _write_bench_json("BENCH_ckpt_io.json", ckpt)
+    _write_bench_json("BENCH_checkout.json", checkout)
 
 
 def _print_rows(rows) -> None:
@@ -42,6 +69,18 @@ def bench_ckpt_io(quick: bool):
         return b.run_checkout_io(n_covs=8, elems=1 << 17,
                                  chunk_bytes=1 << 16, repeats=2)
     return b.run_checkout_io()
+
+
+def bench_delta(quick: bool):
+    """Chunk-granular delta pipeline: bytes moved vs logical, per backend /
+    codec / phase, plus the warm-cache zero-fetch row.  Writes BENCH_*.json."""
+    from benchmarks import bench_delta as b
+    if quick:
+        rows = b.run(n_covs=2, elems=1 << 14, chunk_bytes=1 << 12, repeats=2)
+    else:
+        rows = b.run()
+    _emit_delta_artifacts(rows)
+    return rows
 
 
 def bench_tracking(quick: bool):
@@ -103,6 +142,7 @@ def bench_roofline(quick: bool):
 ALL = {
     "ckpt": bench_ckpt,
     "ckpt_io": bench_ckpt_io,
+    "delta": bench_delta,
     "tracking": bench_tracking,
     "covar_sweep": bench_covar_sweep,
     "scalability": bench_scalability,
@@ -115,7 +155,17 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
     ap.add_argument("--only", choices=list(ALL))
+    ap.add_argument("--smoke", action="store_true",
+                    help="fast CI gate: delta-pipeline bytes-moved "
+                         "assertions + BENCH_*.json artifacts")
     args = ap.parse_args()
+    if args.smoke:
+        from benchmarks import bench_delta as b
+        rows = b.smoke()        # raises AssertionError on regression
+        _print_rows(rows)
+        _emit_delta_artifacts(rows)
+        print("# delta smoke OK", flush=True)
+        return
     names = [args.only] if args.only else list(ALL)
     for name in names:
         t0 = time.time()

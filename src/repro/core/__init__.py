@@ -11,9 +11,10 @@ Checkpoint Graph at co-variable granularity) as a composable library:
     c2 = s.run("train", steps=100)
     s.checkout(c1)          # sub-second undo: loads only diverged co-variables
 """
-from repro.core.chunkstore import (ChunkStore, DirectoryStore,
-                                   FaultInjectedStore, MemoryStore,
-                                   SQLiteStore, open_store)
+from repro.core.chunkstore import (ChunkCache, ChunkStore, CompressedStore,
+                                   DirectoryStore, FaultInjectedStore,
+                                   MemoryStore, SQLiteStore,
+                                   available_codecs, open_store)
 from repro.core.covariable import (CovKey, LeafRecord, RecordBuilder,
                                    StateDelta, cov_key, detect_delta,
                                    group_covariables)
@@ -27,8 +28,9 @@ from repro.core.baselines import (DetReplaySession, DumpSession,
                                   PageIncremental)
 
 __all__ = [
-    "ChunkStore", "DirectoryStore", "FaultInjectedStore", "MemoryStore",
-    "SQLiteStore", "open_store", "CovKey", "LeafRecord", "RecordBuilder",
+    "ChunkCache", "ChunkStore", "CompressedStore", "DirectoryStore",
+    "FaultInjectedStore", "MemoryStore", "SQLiteStore", "available_codecs",
+    "open_store", "CovKey", "LeafRecord", "RecordBuilder",
     "StateDelta", "cov_key", "detect_delta", "group_covariables",
     "CheckpointGraph", "CheckoutPlan", "CommitNode", "Namespace",
     "TrackedNamespace", "flatten_tree", "unflatten_tree",

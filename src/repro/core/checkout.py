@@ -21,23 +21,45 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from repro.core import delta as delta_mod
 from repro.core import parallel
-from repro.core.chunkstore import ChunkStore
+from repro.core.chunkstore import ChunkCache, ChunkStore
 from repro.core.covariable import CovKey, LeafRecord
 from repro.core.graph import CheckpointGraph, CheckoutPlan, key_str
+from repro.core.hashing import hashes_hex
 from repro.core.serialize import (ChunkMissingError, SerializationError,
-                                  leaf_from_bytes, view_from_base)
+                                  leaf_from_bytes, leaf_meta, leaf_nbytes,
+                                  view_from_base)
 
 
 @dataclass
 class CheckoutStats:
     covs_loaded: int = 0
+    covs_patched: int = 0           # subset of covs_loaded done via patching
     covs_deleted: int = 0
     covs_identical: int = 0
     covs_recomputed: int = 0
-    bytes_loaded: int = 0
+    bytes_loaded: int = 0           # *moved*: bytes fetched from the backend
+    bytes_cached: int = 0           # served from the shared chunk cache
+    bytes_logical: int = 0          # logical size of restored co-variables
+    chunks_patched: int = 0         # dirty chunks fetched + patched in
+    chunks_inplace: int = 0         # clean chunks reused from the live buffer
     wall_s: float = 0.0
     diff_s: float = 0.0
+
+
+@dataclass
+class ChunkPatch:
+    """Chunk-level checkout plan for one diverged co-variable: fetch only
+    ``dirty`` chunks of the target manifest and patch them into the live
+    base buffer, reusing every clean chunk already in memory."""
+    key: CovKey
+    version: str
+    manifest: dict
+    base: Any                       # live base buffer (np.ndarray/jax.Array)
+    dirty: List[int]                # chunk indices to fetch + patch
+    offsets: List[int]              # byte offset of every chunk
+    is_device: bool                 # jax base: rebuild via on-device update
 
 
 def materialize_manifest(store: ChunkStore, manifest: dict,
@@ -59,6 +81,8 @@ def materialize_manifest(store: ChunkStore, manifest: dict,
         data = chunks.get(c["key"]) if chunks is not None else None
         if data is None:
             data = store.get_chunk(c["key"])
+            if stats:
+                stats.bytes_loaded += len(data)
         if len(data) != c["n"]:
             raise ChunkMissingError(f"chunk {c['key']}: size mismatch")
         parts.append(data)
@@ -66,7 +90,7 @@ def materialize_manifest(store: ChunkStore, manifest: dict,
     if len(blob) != base_info["nbytes"]:
         raise ChunkMissingError("assembled size mismatch")
     if stats:
-        stats.bytes_loaded += len(blob)
+        stats.bytes_logical += len(blob)
     base = leaf_from_bytes(blob, base_info["meta"])
 
     out: Dict[str, Any] = {}
@@ -102,16 +126,33 @@ def records_from_manifest(manifest: dict, values: Dict[str, Any]
 
 class StateLoader:
     def __init__(self, graph: CheckpointGraph, store: ChunkStore,
-                 fallback=None, *, io_threads: Optional[int] = None):
+                 fallback=None, *, io_threads: Optional[int] = None,
+                 cache: Optional[ChunkCache] = None):
         self.graph = graph
         self.store = store
         self.fallback = fallback      # callable (key, version, stats) -> values
+        # shared chunk cache (writer-populated): just-committed chunks are
+        # served from memory, never the backend
+        self.chunk_cache = cache
+        # chunk-level patch checkout (dirty-chunk fetch into live buffers);
+        # False restores the cov-granular pre-delta path (benchmarks).
+        self.patch_enabled = True
         # <=1 forces the serial pre-engine path (benchmark baseline).
         self.io_threads = parallel.resolve_io_threads(io_threads)
         # Adaptive engagement (see parallel.py): first-slab latency below
         # the gate stays serial outright; above it a measured trial decides.
         # probe_threshold_s = 0.0 forces the pipeline; inf forces serial.
         self.probe_threshold_s = parallel.PARALLEL_LATENCY_THRESHOLD_S
+
+    def _cache_probe(self, keys, stats: Optional[CheckoutStats]
+                     ) -> Dict[str, bytes]:
+        """Chunks served by the shared cache (accounted as cached bytes)."""
+        if self.chunk_cache is None:
+            return {}
+        hits = self.chunk_cache.get_many(dict.fromkeys(keys))
+        if stats and hits:
+            stats.bytes_cached += sum(len(v) for v in hits.values())
+        return hits
 
     @staticmethod
     def _fetch_parallel(slabs, fetch, consume, workers):
@@ -125,8 +166,11 @@ class StateLoader:
                  stats: Optional[CheckoutStats] = None) -> Dict[str, Any]:
         manifest = self.graph.manifest_of(key, version)
         if manifest is not None and not manifest.get("unserializable"):
+            hits = self._cache_probe(
+                [c["key"] for c in manifest["base"]["chunks"]], stats)
             try:
-                return materialize_manifest(self.store, manifest, stats)
+                return materialize_manifest(self.store, manifest, stats,
+                                            chunks=hits or None)
             except (ChunkMissingError, SerializationError):
                 pass
         if self.fallback is None:
@@ -166,6 +210,11 @@ class StateLoader:
                 ready.append((key, version, manifest,
                               [c["key"] for c in manifest["base"]["chunks"]]))
 
+        # shared-cache pass: chunks written or fetched earlier this session
+        # are served from memory and never enter the fetch plan
+        cache.update(self._cache_probe(
+            [ck for _, _, _, cks in ready for ck in cks], stats))
+
         workers = self.io_threads \
             if getattr(self.store, "supports_parallel_get", True) else 1
         if workers <= 1 or len(ready) == 0:
@@ -177,7 +226,7 @@ class StateLoader:
             owners: Dict[str, List[int]] = {}
             pending = []
             for i, (_, _, _, cks) in enumerate(ready):
-                uniq = set(cks)
+                uniq = set(cks) - cache.keys()    # cache hits need no fetch
                 pending.append(len(uniq))
                 for ck in uniq:
                     owners.setdefault(ck, []).append(i)
@@ -204,12 +253,18 @@ class StateLoader:
                     retry.append((key, version))
                     pinned.update(cks)
                 for ck in set(cks):
+                    if ck not in refs:            # cache-served key
+                        continue
                     refs[ck] -= 1
                     if refs[ck] == 0 and ck not in pinned:
                         cache.pop(ck, None)
 
             def consume(slab, got):
                 cache.update(got)
+                if stats:
+                    stats.bytes_loaded += sum(len(v) for v in got.values())
+                if self.chunk_cache is not None:
+                    self.chunk_cache.put_many(got)
                 for ck in slab:      # missing keys count as resolved: the
                     for i in owners[ck]:   # cov will fail -> fallback
                         pending[i] -= 1
@@ -288,6 +343,161 @@ class StateLoader:
             out[key] = self.fallback(key, version, stats)
         return out
 
+    # ------------------------------------------------------------------
+    # chunk-level patch checkout
+    # ------------------------------------------------------------------
+    def _patch_candidate(self, key: CovKey, version: str,
+                         records: Dict[str, LeafRecord], ns,
+                         alias_groups: Dict[int, set]
+                         ) -> Optional[ChunkPatch]:
+        """Chunk-level plan for one diverged co-variable, or None when only
+        full materialization is safe (structure divergence, missing hashes,
+        unaligned/non-contiguous buffers, or everything dirty)."""
+        manifest = self.graph.manifest_of(key, version)
+        if manifest is None or manifest.get("unserializable"):
+            return None
+        base_info = manifest.get("base") or {}
+        meta = base_info.get("meta") or {}
+        tgt_det = base_info.get("det_hashes") or []
+        tgt_chunks = base_info.get("chunks") or []
+        nbytes = base_info.get("nbytes", 0)
+        if meta.get("kind") != "array" or not tgt_det or nbytes <= 0 \
+                or len(tgt_det) != len(tgt_chunks):
+            return None
+        man_members = {m["name"]: m for m in manifest["members"]}
+        if set(man_members) != set(key):
+            return None
+        # live side: every member present, same structure, one shared base
+        recs = []
+        for name in key:
+            rec = records.get(name)
+            if rec is None or name not in ns:
+                return None
+            recs.append(rec)
+        if len({r.alias_id for r in recs}) != 1 \
+                or alias_groups.get(recs[0].alias_id) != set(key):
+            return None                 # live aliasing differs from target
+        live_det = recs[0].base_hashes
+        if live_det is None or len(live_det) != len(tgt_det):
+            return None
+        for rec, name in zip(recs, key):
+            m = man_members[name]
+            if (rec.kind, rec.dtype, list(rec.shape), rec.view) != \
+                    (m["kind"], m["dtype"], m["shape"], m.get("view")):
+                return None
+        from repro.core.serialize import base_of
+        base = base_of(ns[key[0]])
+        if leaf_meta(base) != meta or leaf_nbytes(base) != nbytes:
+            return None
+
+        offsets = delta_mod.chunk_offsets(tgt_chunks)
+        if offsets and offsets[-1] + int(tgt_chunks[-1]["n"]) != nbytes:
+            return None
+        dirty = delta_mod.dirty_indices(hashes_hex(live_det), tgt_det)
+        if len(dirty) == len(tgt_det):
+            return None                 # fully diverged: full load is cheaper
+
+        if isinstance(base, np.ndarray):
+            if not (base.flags["C_CONTIGUOUS"] and base.flags["WRITEABLE"]):
+                return None
+            try:
+                memoryview(base).cast("B")
+            except (TypeError, ValueError, BufferError):
+                return None
+            is_device = False
+        else:
+            # device array: dirty ranges must be element-aligned for the
+            # on-device dynamic_update_slice patch
+            item = np.dtype(meta["dtype"]).itemsize
+            for i in dirty:
+                end = offsets[i] + int(tgt_chunks[i]["n"])
+                if offsets[i] % item or (end % item and end != nbytes):
+                    return None
+            if any(m.get("view") for m in man_members.values()):
+                return None             # strided views are numpy-only
+            is_device = True
+        return ChunkPatch(key=key, version=version, manifest=manifest,
+                          base=base, dirty=dirty, offsets=offsets,
+                          is_device=is_device)
+
+    def plan_patches(self, plan: CheckoutPlan, records: Dict[str, LeafRecord],
+                     ns) -> Tuple[List[ChunkPatch], List[Tuple[CovKey, str]]]:
+        """Split the cov-granular diff into chunk-level patches and full
+        loads; patches are also recorded on ``plan.patches``."""
+        full: List[Tuple[CovKey, str]] = []
+        patches: List[ChunkPatch] = []
+        if not self.patch_enabled:
+            return [], sorted(plan.to_load.items())
+        alias_groups: Dict[int, set] = {}
+        for name, rec in records.items():
+            alias_groups.setdefault(rec.alias_id, set()).add(name)
+        for key, version in sorted(plan.to_load.items()):
+            p = self._patch_candidate(key, version, records, ns, alias_groups)
+            if p is None:
+                full.append((key, version))
+            else:
+                patches.append(p)
+        plan.patches = patches
+        return patches, full
+
+    def _fetch_patch_chunks(self, patches: List[ChunkPatch],
+                            stats: Optional[CheckoutStats]
+                            ) -> Tuple[Dict[str, bytes], List[ChunkPatch],
+                                       List[Tuple[CovKey, str]]]:
+        """Fetch the dirty chunks of all patch plans (cache first, then one
+        pipelined bulk fetch).  Plans with missing/short chunks demote to
+        full loads."""
+        need: Dict[str, int] = {}       # key -> expected logical size
+        for p in patches:
+            chunks = p.manifest["base"]["chunks"]
+            for i in p.dirty:
+                need[chunks[i]["key"]] = int(chunks[i]["n"])
+        got = self._cache_probe(need, stats)
+        missing = [k for k in need if k not in got]
+        if missing:
+            fetched = parallel.fetch_chunks(self.store, missing,
+                                            self.io_threads)
+            if stats:
+                stats.bytes_loaded += sum(len(v) for v in fetched.values())
+            if self.chunk_cache is not None:
+                self.chunk_cache.put_many(fetched)
+            got.update(fetched)
+        ok_patches: List[ChunkPatch] = []
+        demoted: List[Tuple[CovKey, str]] = []
+        for p in patches:
+            chunks = p.manifest["base"]["chunks"]
+            bad = any(chunks[i]["key"] not in got
+                      or len(got[chunks[i]["key"]]) != int(chunks[i]["n"])
+                      for i in p.dirty)
+            if bad:
+                demoted.append((p.key, p.version))
+            else:
+                ok_patches.append(p)
+        return got, ok_patches, demoted
+
+    def _apply_patch(self, p: ChunkPatch, got: Dict[str, bytes],
+                     stats: Optional[CheckoutStats], ns) -> Dict[str, Any]:
+        """Patch dirty chunks into the live base and return the member
+        values of the target state (live view/alias objects are preserved
+        for in-place numpy patches)."""
+        base_info = p.manifest["base"]
+        chunks = base_info["chunks"]
+        segs = [(p.offsets[i], got[chunks[i]["key"]]) for i in p.dirty]
+        if p.is_device:
+            new_base = delta_mod.patch_device_array(p.base, segs)
+            values = {m["name"]: new_base for m in p.manifest["members"]}
+        else:
+            delta_mod.patch_numpy_base(p.base, segs)
+            # live members already view the patched base: identity preserved
+            values = {m["name"]: ns[m["name"]]
+                      for m in p.manifest["members"]}
+        if stats:
+            stats.covs_patched += 1
+            stats.chunks_patched += len(p.dirty)
+            stats.chunks_inplace += len(chunks) - len(p.dirty)
+            stats.bytes_logical += base_info["nbytes"]
+        return values
+
     def checkout(self, tracked_ns, records: Dict[str, LeafRecord],
                  target: str) -> Tuple[Dict[str, LeafRecord], CheckoutStats]:
         """Execute an incremental checkout; mutates the namespace in place.
@@ -301,11 +511,28 @@ class StateLoader:
         stats.diff_s = time.perf_counter() - td
         stats.covs_identical = len(plan.identical)
 
-        # 1. load diverged co-variables (before mutating anything),
-        #    chunk I/O planned up front and prefetched in parallel
-        loaded = self.load_covs(sorted(plan.to_load.items()), stats)
+        # 1. chunk-level refinement: diverged covs whose live buffer matches
+        #    the target structurally only fetch their differing chunks
+        patches, full_items = self.plan_patches(plan, records,
+                                                tracked_ns.base)
+        patch_data, patches, demoted = self._fetch_patch_chunks(patches,
+                                                                stats)
+        full_items = sorted(full_items + demoted)
 
-        # 2. swap into the namespace (tracking paused: checkout is not access)
+        # 2. load fully-diverged co-variables (before mutating anything),
+        #    chunk I/O planned up front and prefetched in parallel
+        loaded = self.load_covs(full_items, stats)
+
+        # 3. apply patches (all data is in hand); unexpected failures fall
+        #    back to the full serial load of just that co-variable
+        for p in patches:
+            try:
+                loaded[p.key] = self._apply_patch(p, patch_data, stats,
+                                                  tracked_ns.base)
+            except Exception:  # noqa: BLE001 — corrupt patch: full reload
+                loaded[p.key] = self.load_cov(p.key, p.version, stats)
+
+        # 4. swap into the namespace (tracking paused: checkout is not access)
         new_records = dict(records)
         with tracked_ns.pause():
             for key in plan.to_delete:

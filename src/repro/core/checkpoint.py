@@ -24,29 +24,96 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 
 import numpy as np
 
+from repro.core import delta as delta_mod
 from repro.core import hashing
-from repro.core.chunkstore import ChunkStore, chunk_key
+from repro.core.chunkstore import ChunkCache, ChunkStore, chunk_key
 from repro.core.covariable import CovKey, LeafRecord
 from repro.core.graph import key_str
-from repro.core.serialize import (SerializationError, base_of, leaf_to_bytes,
-                                  view_spec)
+from repro.core.serialize import (SerializationError, base_of, leaf_meta,
+                                  leaf_nbytes, leaf_to_bytes, view_spec)
 
 
 @dataclass
 class WriteStats:
-    bytes_serialized: int = 0       # bytes of updated co-variables
+    bytes_serialized: int = 0       # *moved*: bytes actually serialized /
+                                    # transferred (dirty ranges only on the
+                                    # delta path)
+    bytes_logical: int = 0          # logical size of updated co-variables
     bytes_written: int = 0          # new chunk bytes actually stored
     chunks_written: int = 0
     chunks_reused: int = 0          # skipped via detection-hash delta
     chunks_dedup: int = 0           # skipped via CAS hit
+    covs_delta: int = 0             # covs written via the dirty-range path
     unserializable: int = 0
     wall_s: float = 0.0
 
 
-def _hashes_hex(h: Optional[np.ndarray]) -> List[str]:
-    if h is None:
-        return []
-    return [format(int(x), "016x") for x in np.asarray(h, dtype=np.uint64)]
+_hashes_hex = hashing.hashes_hex
+
+
+def _try_delta_manifest(base, det_hex: List[str], prev_manifest,
+                        chunk_bytes: int, stats: WriteStats,
+                        put, has, members) -> Optional[dict]:
+    """Dirty-range fast path: when the previous manifest matches this base
+    structurally, compare detection hashes *first* and serialize only the
+    dirty byte ranges — the full blob is never built and device→host
+    traffic scales with dirty bytes, not total bytes.  Returns None when
+    the fast path doesn't apply (first version, structure change, non-array
+    leaf, everything dirty) — the caller falls back to full serialization,
+    which produces bit-identical chunks."""
+    if not det_hex or not prev_manifest or prev_manifest.get("unserializable"):
+        return None
+    prev_base = prev_manifest.get("base") or {}
+    meta = leaf_meta(base)
+    if meta.get("kind") != "array" or prev_base.get("meta") != meta:
+        return None
+    n = leaf_nbytes(base)
+    if n <= 0 or prev_base.get("nbytes") != n:
+        return None
+    n_chunks = -(-n // chunk_bytes)
+    prev_chunks = prev_base.get("chunks", [])
+    prev_det = prev_base.get("det_hashes", [])
+    if not (len(det_hex) == len(prev_chunks) == len(prev_det) == n_chunks):
+        return None
+    dirty_set = set(delta_mod.dirty_indices(prev_det, det_hex))
+    dirty_set.update(                # stored size drift also forces rewrite
+        i for i in range(n_chunks)
+        if prev_chunks[i]["n"] != min((i + 1) * chunk_bytes, n)
+        - i * chunk_bytes)
+    dirty = sorted(dirty_set)
+    if len(dirty) == n_chunks:
+        return None                  # fully diverged: full path, same cost
+    reader = delta_mod.range_reader(base, chunk_bytes)
+    if reader is None:
+        return None
+
+    stats.bytes_logical += n
+    stats.covs_delta += 1
+    chunks: List[Optional[dict]] = [None] * n_chunks
+    for i in range(n_chunks):
+        if i not in dirty_set:
+            chunks[i] = {"key": prev_chunks[i]["key"],
+                         "n": prev_chunks[i]["n"]}
+            stats.chunks_reused += 1
+    for start, stop in delta_mod.coalesce(dirty):
+        lo, hi = start * chunk_bytes, min(stop * chunk_bytes, n)
+        data = reader(lo, hi)
+        stats.bytes_serialized += len(data)
+        for i in range(start, stop):
+            clo = i * chunk_bytes - lo
+            chi = min((i + 1) * chunk_bytes, n) - lo
+            cdata = data[clo:chi]
+            ck = chunk_key(cdata)
+            if has(ck):
+                stats.chunks_dedup += 1
+            else:
+                put(ck, cdata)
+                stats.chunks_written += 1
+                stats.bytes_written += len(cdata)
+            chunks[i] = {"key": ck, "n": chi - clo}
+    return {"members": members, "unserializable": False,
+            "base": {"meta": meta, "nbytes": n, "chunks": chunks,
+                     "det_hashes": det_hex}}
 
 
 def build_manifest(store: ChunkStore, key: CovKey,
@@ -55,12 +122,15 @@ def build_manifest(store: ChunkStore, key: CovKey,
                    prev_manifest: Optional[dict],
                    stats: WriteStats,
                    put: Callable[[str, bytes], None],
-                   has: Optional[Callable[[str], bool]] = None) -> dict:
+                   has: Optional[Callable[[str], bool]] = None,
+                   delta_ranges: bool = True) -> dict:
     """Serialize one co-variable into a manifest + chunk puts.
 
     ``has`` is the CAS-dedup membership test; the writer passes a variant
     that also sees chunks batched/enqueued but not yet landed in the store,
-    so deferred (batched or async) puts never double-write within a delta."""
+    so deferred (batched or async) puts never double-write within a delta.
+    ``delta_ranges=False`` disables the dirty-range fast path (benchmark
+    baseline — the pre-delta cov-granular writer)."""
     if has is None:
         has = store.has_chunk
     members = []
@@ -73,14 +143,23 @@ def build_manifest(store: ChunkStore, key: CovKey,
         return {"members": members, "unserializable": True}
 
     base = base_of(ns[records[0].name])
+    det = records[0].base_hashes
+    det_hex = _hashes_hex(det)
+
+    # chunk-granular fast path: det-hash compare first, then serialize /
+    # transfer only the dirty ranges (bytes_serialized ~ dirty bytes)
+    if delta_ranges:
+        man = _try_delta_manifest(base, det_hex, prev_manifest, chunk_bytes,
+                                  stats, put, has, members)
+        if man is not None:
+            return man
+
     try:
         blob, meta = leaf_to_bytes(base)
     except SerializationError:
         stats.unserializable += 1
         return {"members": members, "unserializable": True}
 
-    det = records[0].base_hashes
-    det_hex = _hashes_hex(det)
     prev_chunks: Dict[int, dict] = {}
     if prev_manifest and not prev_manifest.get("unserializable") \
             and prev_manifest.get("base", {}).get("meta") == meta:
@@ -93,6 +172,7 @@ def build_manifest(store: ChunkStore, key: CovKey,
     n = len(blob)
     n_chunks = max(-(-n // chunk_bytes), 1) if n else 0
     stats.bytes_serialized += n
+    stats.bytes_logical += n
     for i in range(n_chunks):
         lo, hi = i * chunk_bytes, min((i + 1) * chunk_bytes, n)
         prev = prev_chunks.get(i)
@@ -128,12 +208,19 @@ class CheckpointWriter:
 
     def __init__(self, store: ChunkStore, *, chunk_bytes: int = 1 << 20,
                  async_write: bool = False, write_deadline_s: float = 0.0,
-                 drain_batch: int = 64):
+                 drain_batch: int = 64,
+                 cache: Optional[ChunkCache] = None):
         self.store = store
         self.chunk_bytes = chunk_bytes
+        self.cache = cache          # shared with the StateLoader: a chunk
+                                    # written here is served back to checkout
+                                    # without touching the backend
         self.async_write = async_write
         self.write_deadline_s = write_deadline_s
         self.drain_batch = drain_batch
+        # dirty-range serialization; False = pre-delta full-blob writer
+        # (benchmark baseline)
+        self.delta_ranges = True
         self._q: "queue.Queue" = queue.Queue()
         self._batch: List[Tuple[str, bytes]] = []     # sync-mode delta batch
         self._batch_keys: set = set()
@@ -180,6 +267,8 @@ class CheckpointWriter:
                 return
 
     def _put(self, ck: str, data: bytes) -> None:
+        if self.cache is not None:
+            self.cache.put(ck, bytes(data))
         if self.async_write:
             self.pending_keys.add(ck)
             self._q.put((ck, bytes(data)))
@@ -210,7 +299,8 @@ class CheckpointWriter:
         for key, records in delta.updated.items():
             man = build_manifest(self.store, key, records, ns,
                                  self.chunk_bytes, prev_manifest_of(key),
-                                 stats, self._put, self._has)
+                                 stats, self._put, self._has,
+                                 delta_ranges=self.delta_ranges)
             manifests[key_str(key)] = man
         self._flush_batch()                  # sync mode: durable on return
         if self.async_write and self.write_deadline_s:

@@ -23,7 +23,10 @@ import os
 import sqlite3
 import threading
 import time
-from typing import Dict, Iterable, List, Optional, Sequence, Tuple
+import zlib
+from collections import OrderedDict
+from dataclasses import dataclass
+from typing import Callable, Dict, Iterable, List, Optional, Sequence, Tuple
 
 from repro.core import parallel
 from repro.core.serialize import ChunkMissingError
@@ -31,6 +34,209 @@ from repro.core.serialize import ChunkMissingError
 
 def chunk_key(data: bytes) -> str:
     return hashlib.blake2b(data, digest_size=16).hexdigest()
+
+
+# ---------------------------------------------------------------------------
+# per-chunk codec layer
+# ---------------------------------------------------------------------------
+#
+# Chunks are keyed by the blake2b of their *logical* (uncompressed) content,
+# so dedup and manifests are codec-agnostic; a compressed chunk is stored as
+# a tagged frame:  MAGIC(4) | codec_id(1) | raw_len(8 LE) | payload.
+# Reads are transparently decoded by every backend (frame sniffing), so a
+# store written with compression stays readable by uncompressed readers and
+# vice versa — old stores contain only unframed chunks, which pass through
+# untouched.  Incompressible chunks are stored raw (the frame must *save*
+# bytes to be used), so pathological data costs nothing.
+
+CHUNK_MAGIC = b"KZC1"
+_FRAME_HDR = len(CHUNK_MAGIC) + 1 + 8
+
+
+@dataclass(frozen=True)
+class ChunkCodec:
+    codec_id: int
+    name: str
+    compress: Callable[[bytes], bytes]
+    decompress: Callable[[bytes], bytes]
+
+
+def _build_codecs() -> Dict[int, ChunkCodec]:
+    out = {1: ChunkCodec(1, "zlib",
+                         lambda b: zlib.compress(b, 1), zlib.decompress)}
+    try:                                   # optional, not a hard dependency
+        import zstandard as _zstd
+        _zc, _zd = _zstd.ZstdCompressor(level=3), _zstd.ZstdDecompressor()
+        out[2] = ChunkCodec(2, "zstd", _zc.compress, _zd.decompress)
+    except Exception:  # noqa: BLE001 — absent/broken module: codec skipped
+        pass
+    try:
+        import lz4.frame as _lz4
+        out[3] = ChunkCodec(3, "lz4", _lz4.compress, _lz4.decompress)
+    except Exception:  # noqa: BLE001
+        pass
+    return out
+
+
+_CODECS_BY_ID = _build_codecs()
+_CODECS_BY_NAME = {c.name: c for c in _CODECS_BY_ID.values()}
+
+
+def available_codecs() -> List[str]:
+    return sorted(_CODECS_BY_NAME)
+
+
+def resolve_codec(codec) -> Optional[ChunkCodec]:
+    """None/"raw"/"none" -> no compression; "auto" -> best available
+    (zstd > lz4 > zlib); a name -> that codec or ValueError."""
+    if codec is None or isinstance(codec, ChunkCodec):
+        return codec
+    name = str(codec).lower()
+    if name in ("raw", "none", ""):
+        return None
+    if name == "auto":
+        for pick in ("zstd", "lz4", "zlib"):
+            if pick in _CODECS_BY_NAME:
+                return _CODECS_BY_NAME[pick]
+        return None
+    if name not in _CODECS_BY_NAME:
+        raise ValueError(f"unknown chunk codec {codec!r}; "
+                         f"available: {available_codecs()}")
+    return _CODECS_BY_NAME[name]
+
+
+_CODEC_STORED = 0                 # escape frame: payload is the raw bytes
+
+
+def encode_chunk(data: bytes, codec: Optional[ChunkCodec]) -> bytes:
+    """Frame ``data`` with ``codec`` iff that actually saves bytes.
+
+    Raw data that happens to *begin with the magic* is escaped into a
+    "stored" frame (codec id 0) so decoding stays unambiguous — without
+    this, such a chunk would be misparsed as a frame on read."""
+    if codec is not None:
+        comp = codec.compress(data)
+        if len(comp) + _FRAME_HDR < len(data):
+            return (CHUNK_MAGIC + bytes([codec.codec_id])
+                    + len(data).to_bytes(8, "little") + comp)
+    if data.startswith(CHUNK_MAGIC):
+        return (CHUNK_MAGIC + bytes([_CODEC_STORED])
+                + len(data).to_bytes(8, "little") + data)
+    return data
+
+
+def decode_chunk(data: bytes) -> bytes:
+    """Transparent inverse of :func:`encode_chunk`: unframed chunks pass
+    through; framed chunks decompress (or unwrap the "stored" escape).
+    Anything that merely *looks* like a frame but fails to parse — an
+    unregistered codec id, a failed decompression, a length mismatch — is
+    returned verbatim: it is far more likely a raw legacy chunk whose bytes
+    coincide with the magic than a valid frame, and genuinely corrupt or
+    codec-unavailable chunks are still caught downstream by the manifest's
+    per-chunk size and content-address checks (-> fallback recomputation).
+    """
+    if len(data) < _FRAME_HDR or not data.startswith(CHUNK_MAGIC):
+        return data
+    codec_id = data[len(CHUNK_MAGIC)]
+    raw_len = int.from_bytes(data[len(CHUNK_MAGIC) + 1:_FRAME_HDR], "little")
+    if codec_id == _CODEC_STORED:
+        if raw_len == len(data) - _FRAME_HDR:
+            return data[_FRAME_HDR:]
+        return data
+    codec = _CODECS_BY_ID.get(codec_id)
+    if codec is None:
+        return data
+    try:
+        raw = codec.decompress(data[_FRAME_HDR:])
+    except Exception:  # noqa: BLE001 — not a real frame (or corrupt)
+        return data
+    if len(raw) != raw_len:
+        return data
+    return raw
+
+
+# ---------------------------------------------------------------------------
+# shared chunk cache
+# ---------------------------------------------------------------------------
+
+DEFAULT_CACHE_BYTES = 64 << 20
+
+
+def resolve_cache_bytes(n: Optional[int] = None) -> int:
+    """Effective cache capacity: explicit arg > $KISHU_CACHE_BYTES > 64 MiB.
+    ``0`` disables the cache."""
+    if n is None:
+        env = os.environ.get("KISHU_CACHE_BYTES", "").strip()
+        try:
+            n = int(env) if env else DEFAULT_CACHE_BYTES
+        except ValueError:
+            n = DEFAULT_CACHE_BYTES
+    return max(0, int(n))
+
+
+class ChunkCache:
+    """Bounded LRU over *logical* chunk bytes, shared between the
+    CheckpointWriter and the StateLoader: chunks written this session are
+    served back to checkout without touching the backend at all, and chunks
+    fetched once stay warm for the next time-travel hop.  Thread-safe (the
+    async writer populates it from its drain thread)."""
+
+    def __init__(self, max_bytes: Optional[int] = None):
+        self.max_bytes = resolve_cache_bytes(max_bytes)
+        self._d: "OrderedDict[str, bytes]" = OrderedDict()
+        self._bytes = 0
+        self._lock = threading.Lock()
+        self.hits = 0
+        self.misses = 0
+
+    def __len__(self) -> int:
+        return len(self._d)
+
+    @property
+    def bytes_used(self) -> int:
+        return self._bytes
+
+    def put(self, key: str, data: bytes) -> None:
+        if self.max_bytes <= 0 or len(data) > self.max_bytes:
+            return
+        with self._lock:
+            old = self._d.pop(key, None)
+            if old is not None:
+                self._bytes -= len(old)
+            self._d[key] = data
+            self._bytes += len(data)
+            while self._bytes > self.max_bytes:
+                _, evicted = self._d.popitem(last=False)
+                self._bytes -= len(evicted)
+
+    def put_many(self, mapping: Dict[str, bytes]) -> None:
+        for k, v in mapping.items():
+            self.put(k, v)
+
+    def get(self, key: str) -> Optional[bytes]:
+        if self.max_bytes <= 0:
+            return None
+        with self._lock:
+            data = self._d.get(key)
+            if data is None:
+                self.misses += 1
+                return None
+            self._d.move_to_end(key)
+            self.hits += 1
+            return data
+
+    def get_many(self, keys: Iterable[str]) -> Dict[str, bytes]:
+        out: Dict[str, bytes] = {}
+        for k in keys:
+            data = self.get(k)
+            if data is not None:
+                out[k] = data
+        return out
+
+    def clear(self) -> None:
+        with self._lock:
+            self._d.clear()
+            self._bytes = 0
 
 
 class ChunkStore:
@@ -142,16 +348,16 @@ class MemoryStore(ChunkStore):
 
     def get_chunk(self, key):
         try:
-            return self.chunks[key]
+            return decode_chunk(self.chunks[key])
         except KeyError:
             raise ChunkMissingError(key) from None
 
     def get_chunks(self, keys, *, missing_ok=False):
         chunks = self.chunks
         if missing_ok:
-            return {k: chunks[k] for k in keys if k in chunks}
+            return {k: decode_chunk(chunks[k]) for k in keys if k in chunks}
         try:
-            return {k: chunks[k] for k in keys}
+            return {k: decode_chunk(chunks[k]) for k in keys}
         except KeyError as e:
             raise ChunkMissingError(e.args[0]) from None
 
@@ -207,7 +413,7 @@ class DirectoryStore(ChunkStore):
     def get_chunk(self, key):
         try:
             with open(self._chunk_path(key), "rb") as f:
-                return f.read()
+                return decode_chunk(f.read())
         except FileNotFoundError:
             raise ChunkMissingError(key) from None
 
@@ -322,7 +528,7 @@ class SQLiteStore(ChunkStore):
             "SELECT data FROM chunks WHERE key=?", (key,)).fetchone()
         if row is None:
             raise ChunkMissingError(key)
-        return bytes(row[0])
+        return decode_chunk(bytes(row[0]))
 
     def has_chunk(self, key):
         return self._con().execute(
@@ -341,7 +547,7 @@ class SQLiteStore(ChunkStore):
             rows = con.execute(
                 f"SELECT key, data FROM chunks WHERE key IN ({marks})", part)
             for k, d in rows:
-                out[k] = bytes(d)
+                out[k] = decode_chunk(bytes(d))
         if not missing_ok and len(out) != len(uniq):
             missing = next(k for k in uniq if k not in out)
             raise ChunkMissingError(missing)
@@ -404,6 +610,68 @@ class SQLiteStore(ChunkStore):
     def n_chunks(self):
         return int(self._con().execute(
             "SELECT COUNT(*) FROM chunks").fetchone()[0])
+
+
+class CompressedStore(ChunkStore):
+    """Write-side codec wrapper: chunks are framed with ``codec`` on every
+    put path; reads pass through (all backends decode frames natively), so
+    compressed and uncompressed chunks mix freely in one store and either
+    reader works against either writer.  Tracks logical vs stored bytes so
+    benchmarks and the CLI can report the compression win."""
+
+    def __init__(self, inner: ChunkStore, codec="auto"):
+        self.inner = inner
+        self.codec = resolve_codec(codec)
+        self.min_slab = getattr(inner, "min_slab", 1)
+        self.supports_parallel_get = getattr(inner, "supports_parallel_get",
+                                             True)
+        self.logical_put_bytes = 0
+        self.stored_put_bytes = 0
+
+    def _encode(self, data: bytes) -> bytes:
+        enc = encode_chunk(data, self.codec)
+        self.logical_put_bytes += len(data)
+        self.stored_put_bytes += len(enc)
+        return enc
+
+    def put_chunk(self, key, data):
+        return self.inner.put_chunk(key, self._encode(data))
+
+    def put_chunks(self, pairs):
+        return self.inner.put_chunks([(k, self._encode(d)) for k, d in pairs])
+
+    def get_chunk(self, key):
+        return self.inner.get_chunk(key)
+
+    def get_chunks(self, keys, *, missing_ok=False):
+        return self.inner.get_chunks(keys, missing_ok=missing_ok)
+
+    def has_chunk(self, key):
+        return self.inner.has_chunk(key)
+
+    def list_chunk_keys(self):
+        return self.inner.list_chunk_keys()
+
+    def chunk_sizes(self, keys):
+        return self.inner.chunk_sizes(keys)
+
+    def delete_chunk(self, key):
+        self.inner.delete_chunk(key)
+
+    def put_meta(self, name, doc):
+        self.inner.put_meta(name, doc)
+
+    def get_meta(self, name):
+        return self.inner.get_meta(name)
+
+    def list_meta(self, prefix):
+        return self.inner.list_meta(prefix)
+
+    def chunk_bytes_total(self):
+        return self.inner.chunk_bytes_total()
+
+    def n_chunks(self):
+        return self.inner.n_chunks()
 
 
 # ---------------------------------------------------------------------------
@@ -483,12 +751,22 @@ class FaultInjectedStore(ChunkStore):
         return self.inner.n_chunks()
 
 
-def open_store(uri: str) -> ChunkStore:
-    """"memory://", "dir:///path", "sqlite:///path.db" or a bare path."""
+def open_store(uri: str, codec=None) -> ChunkStore:
+    """"memory://", "dir:///path", "sqlite:///path.db" or a bare path.
+
+    A ``?codec=NAME`` suffix (or the ``codec`` argument) wraps the store in
+    :class:`CompressedStore` — e.g. ``sqlite:///ckpt.db?codec=auto``.
+    Reading never needs the suffix: frames are decoded transparently."""
+    if "?codec=" in uri:
+        uri, _, codec = uri.partition("?codec=")
     if uri == "memory://" or uri == ":memory:":
-        return MemoryStore()
-    if uri.startswith("sqlite://"):
-        return SQLiteStore(uri[len("sqlite://"):])
-    if uri.startswith("dir://"):
-        return DirectoryStore(uri[len("dir://"):])
-    return DirectoryStore(uri)
+        store: ChunkStore = MemoryStore()
+    elif uri.startswith("sqlite://"):
+        store = SQLiteStore(uri[len("sqlite://"):])
+    elif uri.startswith("dir://"):
+        store = DirectoryStore(uri[len("dir://"):])
+    else:
+        store = DirectoryStore(uri)
+    if resolve_codec(codec) is not None:
+        return CompressedStore(store, codec)
+    return store

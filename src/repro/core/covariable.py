@@ -79,6 +79,19 @@ class RecordBuilder:
         key = id(base)
         if key in cache:
             return cache[key]
+        if self.hasher is hashing.chunk_hashes_np and not is_prng_key(base):
+            import jax
+            if isinstance(base, jax.Array):
+                # device arrays: hash on device (Pallas chunk_hash kernel,
+                # jnp fallback) so delta *detection* doesn't transfer the
+                # whole buffer host-side; None -> host path below
+                h = hashing.chunk_hashes_device(base, self.chunk_bytes)
+                if h is not None:
+                    self.hash_calls += 1
+                    self.hashed_bytes += int(
+                        base.size * np.dtype(base.dtype).itemsize)
+                    cache[key] = h
+                    return h
         if is_prng_key(base):
             import jax
             arr = np.asarray(jax.random.key_data(base))

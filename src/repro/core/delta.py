@@ -1,0 +1,174 @@
+"""Chunk-granular delta planning — shared by the writer and the loader.
+
+Both hot paths move *only the state difference* (the paper's headline):
+
+  - the checkpoint writer serializes just the dirty byte ranges of an
+    updated base buffer (checkpoint.build_manifest), and
+  - the checkout loader fetches and patches just the chunks that differ
+    between the live buffer and the target manifest (checkout.StateLoader).
+
+This module holds the pieces both need: dirty-index computation from
+detection hashes, run coalescing, zero-copy/device-sliced range readers,
+device-side patching, and the exact (hash-free) chunk compare built on the
+``block_diff`` Pallas kernel with a NumPy fallback.
+
+Range extraction never materializes the full buffer: NumPy bases are read
+through a zero-copy ``memoryview``; JAX bases are sliced on device so only
+the dirty ranges cross the device→host boundary.
+"""
+from __future__ import annotations
+
+from typing import Any, Callable, List, Optional, Sequence, Tuple
+
+import numpy as np
+
+
+def dirty_indices(prev_hex: Sequence[str], cur_hex: Sequence[str]) -> List[int]:
+    """Chunk indices whose detection hash differs (index-aligned compare).
+    Indices present on only one side count as dirty."""
+    n = max(len(prev_hex), len(cur_hex))
+    return [i for i in range(n)
+            if i >= len(prev_hex) or i >= len(cur_hex)
+            or prev_hex[i] != cur_hex[i]]
+
+
+def coalesce(indices: Sequence[int]) -> List[Tuple[int, int]]:
+    """Sorted chunk indices -> [start, stop) runs, merging adjacency (one
+    device slice / one store range per run instead of one per chunk)."""
+    runs: List[Tuple[int, int]] = []
+    for i in sorted(indices):
+        if runs and runs[-1][1] == i:
+            runs[-1] = (runs[-1][0], i + 1)
+        else:
+            runs.append((i, i + 1))
+    return runs
+
+
+def chunk_offsets(chunks: Sequence[dict]) -> List[int]:
+    """Byte offset of each chunk in the assembled base blob."""
+    offs, pos = [], 0
+    for c in chunks:
+        offs.append(pos)
+        pos += int(c["n"])
+    return offs
+
+
+# ---------------------------------------------------------------------------
+# dirty-range readers (writer side)
+# ---------------------------------------------------------------------------
+
+def range_reader(base: Any, chunk_bytes: int) -> Optional[Callable[[int, int], bytes]]:
+    """Callable ``(lo, hi) -> bytes`` over the logical byte image of an
+    array base, moving only the requested range; ``None`` when the leaf
+    cannot be range-read (non-array, non-contiguous, unaligned chunking) —
+    callers then fall back to full serialization.
+
+    Ranges must start on a ``chunk_bytes`` boundary; the final range may end
+    at the buffer length.  The byte image matches ``leaf_to_bytes`` (C-order
+    raw bytes), so range-read chunks are bit-identical to full-path chunks.
+    """
+    import jax
+
+    from repro.core.serialize import is_prng_key
+
+    if isinstance(base, np.ndarray):
+        if not base.flags["C_CONTIGUOUS"]:
+            return None
+        try:
+            mv = memoryview(base).cast("B")
+        except (TypeError, ValueError, BufferError):
+            return None
+        return lambda lo, hi: bytes(mv[lo:hi])
+
+    if isinstance(base, jax.Array) and not is_prng_key(base):
+        dt = np.dtype(base.dtype)
+        item = dt.itemsize
+        if item <= 0 or chunk_bytes % item:
+            return None
+        flat = base.reshape(-1)
+        total = flat.shape[0] * item
+
+        def read(lo: int, hi: int) -> bytes:
+            hi = min(hi, total)
+            # element-aligned by construction: lo is a chunk boundary and
+            # hi is a chunk boundary or the buffer end
+            seg = flat[lo // item: -(-hi // item)]
+            return np.asarray(seg).tobytes()[: hi - lo]
+
+        return read
+    return None
+
+
+# ---------------------------------------------------------------------------
+# chunk patching (loader side)
+# ---------------------------------------------------------------------------
+
+def patch_numpy_base(base: np.ndarray, segs: Sequence[Tuple[int, bytes]]
+                     ) -> np.ndarray:
+    """Write byte segments into a live base buffer in place (views and
+    aliases into it stay valid).  Returns the same object."""
+    mv = memoryview(base).cast("B")
+    for off, data in segs:
+        mv[off:off + len(data)] = data
+    return base
+
+
+def patch_device_array(base: Any, segs: Sequence[Tuple[int, bytes]]) -> Any:
+    """Patch a device array by updating only the dirty element ranges on
+    device: the only host→device traffic is the dirty bytes themselves.
+    Segments must be element-aligned (checked by the planner).  Returns a
+    new array (device buffers are immutable)."""
+    import jax
+    import jax.numpy as jnp
+
+    dt = np.dtype(base.dtype)
+    item = dt.itemsize
+    flat = base.reshape(-1)
+    # merge adjacent segments: one dynamic_update_slice per contiguous run
+    # (accumulate parts and join once — a long dirty run must not devolve
+    # into quadratic bytes concatenation)
+    merged: List[Tuple[int, List[bytes]]] = []
+    end = -1
+    for off, data in sorted(segs):
+        if merged and end == off:
+            merged[-1][1].append(data)
+        else:
+            merged.append((off, [data]))
+        end = off + len(data)
+    for off, parts in merged:
+        seg = np.frombuffer(b"".join(parts), dtype=dt)
+        flat = jax.lax.dynamic_update_slice(
+            flat, jnp.asarray(seg), (off // item,))
+    return flat.reshape(base.shape)
+
+
+# ---------------------------------------------------------------------------
+# exact chunk compare (hash-free cross-check)
+# ---------------------------------------------------------------------------
+
+def exact_dirty_indices(a: Any, b: Any, chunk_bytes: int) -> List[int]:
+    """Chunk indices where ``a`` and ``b`` differ bitwise — the exact
+    (collision-free) answer the detection hashes approximate.  Uses the
+    ``block_diff`` Pallas kernel for device arrays (jnp ref, then NumPy
+    byte-compare as fallbacks); used by tests and paranoid verification to
+    cross-check hash-planned deltas."""
+    import jax
+
+    if isinstance(a, jax.Array) and isinstance(b, jax.Array) \
+            and chunk_bytes % 4 == 0 and chunk_bytes & (chunk_bytes - 1) == 0:
+        try:
+            from repro.kernels.block_diff.ops import dirty_chunks
+            return [int(i) for i in dirty_chunks(a, b, chunk_bytes)]
+        except Exception:  # noqa: BLE001 — kernel unavailable: host compare
+            pass
+    ba = np.ascontiguousarray(np.asarray(a)).reshape(-1).view(np.uint8)
+    bb = np.ascontiguousarray(np.asarray(b)).reshape(-1).view(np.uint8)
+    if ba.size != bb.size:
+        raise ValueError("exact_dirty_indices: size mismatch")
+    n_chunks = max(-(-ba.size // chunk_bytes), 1) if ba.size else 0
+    out = []
+    for i in range(n_chunks):
+        lo, hi = i * chunk_bytes, min((i + 1) * chunk_bytes, ba.size)
+        if not np.array_equal(ba[lo:hi], bb[lo:hi]):
+            out.append(i)
+    return out

@@ -16,7 +16,7 @@ from __future__ import annotations
 import json
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core.chunkstore import ChunkStore
 from repro.core.covariable import CovKey
@@ -66,10 +66,18 @@ class CheckoutPlan:
     to_load: Dict[CovKey, str]         # cov -> version to load
     to_delete: List[CovKey]
     identical: List[CovKey]
+    # chunk-level refinement, filled in by StateLoader.plan_patches: diverged
+    # co-variables whose live buffer matches the target structurally are
+    # *patched* (fetch only differing chunks) instead of fully materialized
+    patches: List[Any] = field(default_factory=list)
 
     @property
     def n_diverged(self) -> int:
         return len(self.to_load)
+
+    @property
+    def n_patched(self) -> int:
+        return len(self.patches)
 
 
 class CheckpointGraph:

@@ -21,6 +21,9 @@ blake2b (exact) in the chunk store; this hash only decides what to inspect.
 """
 from __future__ import annotations
 
+import os
+from typing import Optional
+
 import numpy as np
 
 GOLDEN = np.uint32(0x9E3779B9)
@@ -108,6 +111,40 @@ def chunk_hashes_jnp(words, nbytes):
         h = h ^ (h >> 16)
         outs.append(h)
     return jnp.stack(outs, axis=-1)
+
+
+def hashes_hex(h) -> list:
+    """uint64 [n] -> 16-char hex strings (manifest / record interchange)."""
+    if h is None:
+        return []
+    return [format(int(x), "016x") for x in np.asarray(h, dtype=np.uint64)]
+
+
+def chunk_hashes_device(x, chunk_bytes: int = DEFAULT_CHUNK_BYTES
+                        ) -> Optional[np.ndarray]:
+    """Detection hashes of a *device* array without a host round-trip.
+
+    Dispatches to the Pallas ``chunk_hash`` kernel (HBM-bandwidth path),
+    degrading to the jnp oracle and finally to ``None`` (caller hashes on
+    host via :func:`chunk_hashes_np`).  Only engaged off-CPU by default —
+    on CPU the NumPy path is faster than jit dispatch — override with
+    ``KISHU_DEVICE_HASH=1/0``.  Bit-identical to ``chunk_hashes_np`` by the
+    kernel contract (tested).
+    """
+    if chunk_bytes % 4 or chunk_bytes & (chunk_bytes - 1):
+        return None                 # kernel wants a power-of-two chunk
+    env = os.environ.get("KISHU_DEVICE_HASH", "").strip()
+    if env == "0":
+        return None
+    if env != "1":
+        import jax
+        if jax.default_backend() == "cpu":
+            return None
+    try:
+        from repro.kernels.chunk_hash.ops import chunk_hash_u64_auto
+        return chunk_hash_u64_auto(x, chunk_bytes)
+    except Exception:  # noqa: BLE001 — no device backend: host path
+        return None
 
 
 def combine_u64(lanes) -> np.ndarray:

@@ -150,6 +150,33 @@ def slab_size_for(n_items: int, workers: int, *, max_slab: int = 500) -> int:
     return max(1, min(max_slab, -(-n_items // (max(1, workers) * 3))))
 
 
+def fetch_chunks(store, keys: Sequence[str],
+                 max_workers: Optional[int] = None, *,
+                 missing_ok: bool = True) -> dict:
+    """Deduplicated bulk chunk fetch through the prefetch pipeline —
+    round-trip hiding for latency-bound stores; degrades to one
+    backend-native batched call for small requests, non-parallel stores, or
+    nested calls.  Shared by the patch-checkout planner and maintenance
+    paths; the pipeline's worker tagging keeps backend-native batching from
+    nesting a second pool."""
+    uniq = list(dict.fromkeys(keys))
+    workers = resolve_io_threads(max_workers)
+    min_slab = getattr(store, "min_slab", 1)
+    if not getattr(store, "supports_parallel_get", True) or workers <= 1 \
+            or in_io_worker() or len(uniq) <= max(min_slab, workers):
+        return store.get_chunks(uniq, missing_ok=missing_ok)
+    slabs = iter_slabs(uniq, max(min_slab, slab_size_for(len(uniq), workers)))
+    out: dict = {}
+    for got in prefetch_map(
+            lambda slab: store.get_chunks(slab, missing_ok=True),
+            slabs, workers):
+        out.update(got)
+    if not missing_ok and len(out) != len(uniq):
+        from repro.core.serialize import ChunkMissingError
+        raise ChunkMissingError(next(k for k in uniq if k not in out))
+    return out
+
+
 def prefetch_map(fn: Callable[[Any], Any], items: Iterable[Any],
                  max_workers: Optional[int] = None,
                  window: Optional[int] = None) -> Iterator[Any]:

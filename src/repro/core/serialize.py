@@ -140,7 +140,8 @@ def leaf_nbytes(x: Any) -> int:
     if is_prng_key(x):
         return int(np.asarray(jax.random.key_data(x)).nbytes)
     if is_array_leaf(x):
-        return int(np.asarray(x.dtype).itemsize * np.prod(x.shape)) if x.ndim else int(x.dtype.itemsize)
+        return int(np.dtype(x.dtype).itemsize
+                   * int(np.prod(x.shape, dtype=np.int64)))
     try:
         return len(pickle.dumps(x))
     except Exception:  # noqa: BLE001

@@ -23,7 +23,7 @@ from typing import Any, Callable, Dict, List, Optional
 from repro.core import hashing
 from repro.core.checkpoint import CheckpointWriter, WriteStats
 from repro.core.checkout import CheckoutStats, StateLoader
-from repro.core.chunkstore import ChunkStore
+from repro.core.chunkstore import ChunkCache, ChunkStore
 from repro.core.covariable import (CovKey, RecordBuilder, StateDelta,
                                    detect_delta, group_covariables)
 from repro.core.graph import CheckpointGraph, key_str
@@ -52,15 +52,21 @@ class KishuSession:
                  write_deadline_s: float = 0.0,
                  check_all: bool = False,
                  hasher=None,
-                 io_threads: Optional[int] = None):
+                 io_threads: Optional[int] = None,
+                 cache_bytes: Optional[int] = None):
         self.store = store
         self.ns = Namespace()
         self.tracked = TrackedNamespace(self.ns)
         self.graph = CheckpointGraph(store)
         self.builder = RecordBuilder(chunk_bytes, hasher=hasher)
+        # one chunk cache shared by writer and loader: checking out a
+        # just-committed state is served from memory, not the backend
+        # (cache_bytes=0 disables; default $KISHU_CACHE_BYTES or 64 MiB)
+        self.chunk_cache = ChunkCache(cache_bytes)
         self.writer = CheckpointWriter(store, chunk_bytes=chunk_bytes,
                                        async_write=async_write,
-                                       write_deadline_s=write_deadline_s)
+                                       write_deadline_s=write_deadline_s,
+                                       cache=self.chunk_cache)
         self.registry: Dict[str, Callable] = {}
         self.records: Dict[str, Any] = {}
         self.covs: Dict[CovKey, List[str]] = {}
@@ -68,7 +74,8 @@ class KishuSession:
         self.last_run: Optional[RunStats] = None
         self.last_checkout: Optional[CheckoutStats] = None
 
-        self.loader = StateLoader(self.graph, store, io_threads=io_threads)
+        self.loader = StateLoader(self.graph, store, io_threads=io_threads,
+                                  cache=self.chunk_cache)
         self.restorer = DataRestorer(self.graph, self.loader, self.registry)
         self.loader.fallback = self.restorer.recompute
 
@@ -143,7 +150,10 @@ class KishuSession:
             updated_keys=list(delta.updated),
             message=_message,
             stats={"bytes_written": wstats.bytes_written,
+                   "bytes_serialized": wstats.bytes_serialized,
+                   "bytes_logical": wstats.bytes_logical,
                    "chunks_written": wstats.chunks_written,
+                   "chunks_reused": wstats.chunks_reused,
                    "exec_s": stats.exec_s})
         stats.commit_id = node.commit_id
         stats.covs_updated = len(delta.updated)

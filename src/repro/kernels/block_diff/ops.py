@@ -39,3 +39,24 @@ def block_diff(a: jax.Array, b: jax.Array, chunk_bytes: int = 1 << 18, *,
     if backend == "pallas":
         return block_diff_pallas(wa, wb, interpret=interpret)
     return block_diff_ref(wa, wb)
+
+
+_AUTO_BACKEND: list = []        # memoized working backend ([] = unprobed)
+
+
+def dirty_chunks(a: jax.Array, b: jax.Array,
+                 chunk_bytes: int = 1 << 18) -> np.ndarray:
+    """Indices of chunks where ``a`` and ``b`` differ bitwise, as a host
+    int array — the exact-compare entry point the delta pipeline wires in
+    (Pallas kernel where it runs, jnp ref otherwise; memoized probe).
+    Raises when neither backend works (callers compare on host)."""
+    last_err: Exception = RuntimeError("no block_diff backend")
+    for backend in _AUTO_BACKEND or ("pallas", "ref"):
+        try:
+            mask = block_diff(a, b, chunk_bytes, backend=backend)
+        except Exception as e:  # noqa: BLE001 — backend unsupported here
+            last_err = e
+            continue
+        _AUTO_BACKEND[:] = [backend]
+        return np.nonzero(np.asarray(mask))[0]
+    raise last_err

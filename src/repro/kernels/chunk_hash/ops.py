@@ -84,6 +84,27 @@ def chunk_hash_u64(x, chunk_bytes: int = 1 << 18, *,
     return hashing.combine_u64(lanes)
 
 
+_AUTO_BACKEND: list = []        # memoized working backend ([] = unprobed)
+
+
+def chunk_hash_u64_auto(x, chunk_bytes: int = 1 << 18) -> np.ndarray:
+    """uint64 detection hashes with backend auto-selection: the Pallas
+    kernel where it runs (TPU), the jnp oracle otherwise; raises only when
+    neither works (callers then hash on host).  The working backend is
+    probed once and memoized — the delta pipeline calls this per leaf per
+    commit, so repeated exception-driven probing would dominate."""
+    last_err: Exception = RuntimeError("no chunk_hash backend")
+    for backend in _AUTO_BACKEND or ("pallas", "ref"):
+        try:
+            h = chunk_hash_u64(x, chunk_bytes, backend=backend)
+        except Exception as e:  # noqa: BLE001 — backend unsupported here
+            last_err = e
+            continue
+        _AUTO_BACKEND[:] = [backend]
+        return h
+    raise last_err
+
+
 def device_hasher(chunk_bytes: int = 1 << 18, *, backend: str = "pallas",
                   interpret: bool = False):
     """Adapter for RecordBuilder(hasher=...): on-device detection hashing.

@@ -42,6 +42,11 @@ def cmd_show(graph: CheckpointGraph, args) -> int:
     print(f"command {node.command}")
     print(f"message {node.message!r}")
     print(f"state   {len(node.state_index)} co-variables")
+    moved = node.stats.get("bytes_serialized")
+    logical = node.stats.get("bytes_logical")
+    if moved is not None and logical:
+        print(f"delta   {moved:,d} B moved of {logical:,d} B logical "
+              f"({moved / logical:.1%})")
     for ks, man in sorted(node.manifests.items()):
         names = "+".join(parse_key(ks))
         if man.get("unserializable"):
@@ -77,6 +82,16 @@ def cmd_stats(store, graph: CheckpointGraph, args) -> int:
     print(f"chunks       {store.n_chunks()}")
     print(f"chunk bytes  {store.chunk_bytes_total():,d}")
     print(f"graph bytes  {graph.total_meta_bytes():,d}")
+    # delta-pipeline accounting: bytes actually moved at checkpoint time
+    # vs the logical size of everything those checkpoints covered
+    moved = sum(n.stats.get("bytes_serialized", 0)
+                for n in graph.nodes.values())
+    logical = sum(n.stats.get("bytes_logical", 0)
+                  for n in graph.nodes.values())
+    print(f"ckpt moved   {moved:,d}")
+    print(f"ckpt logical {logical:,d}")
+    if logical:
+        print(f"delta ratio  {moved / logical:.1%}")
     return 0
 
 

@@ -58,3 +58,29 @@ def test_order_sensitivity():
 def test_deterministic(buf):
     assert np.array_equal(H.chunk_hashes_np(buf, 2048),
                           H.chunk_hashes_np(bytes(buf), 2048))
+
+
+def test_device_hash_matches_numpy(monkeypatch):
+    """The delta pipeline's device-side detection hashes (Pallas kernel /
+    jnp fallback) must agree bit-for-bit with the host hasher, or delta
+    plans would silently diverge between CPU and accelerator sessions."""
+    monkeypatch.setenv("KISHU_DEVICE_HASH", "1")
+    x = jnp.arange(5000, dtype=jnp.float32) * 0.5
+    h = H.chunk_hashes_device(x, 1 << 12)
+    if h is None:
+        pytest.skip("no device hash backend available")
+    ref = H.chunk_hashes_np(np.asarray(x).tobytes(), 1 << 12)
+    assert np.array_equal(np.asarray(h), ref)
+
+
+def test_device_hash_disabled_by_env(monkeypatch):
+    monkeypatch.setenv("KISHU_DEVICE_HASH", "0")
+    assert H.chunk_hashes_device(jnp.ones(16, jnp.float32), 1 << 12) is None
+
+
+def test_hashes_hex_roundtrip():
+    h = np.array([0, 1, 0xdeadbeef], np.uint64)
+    hx = H.hashes_hex(h)
+    assert hx == ["0000000000000000", "0000000000000001",
+                  "00000000deadbeef"]
+    assert H.hashes_hex(None) == []

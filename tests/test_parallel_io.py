@@ -136,7 +136,10 @@ N_ELEMS = 4000          # x float32 = 16 KB -> 16 chunks at 1 KB each
 
 
 def build_session(store, io_threads):
-    s = KishuSession(store, chunk_bytes=1 << 10, io_threads=io_threads)
+    # cache_bytes=0: these tests measure the *backend* I/O engine; the
+    # shared chunk cache would serve just-written chunks from memory
+    s = KishuSession(store, chunk_bytes=1 << 10, io_threads=io_threads,
+                     cache_bytes=0)
     s.loader.probe_threshold_s = 0.0     # always engage the pipeline
 
     def step(ns, seed):

@@ -122,6 +122,10 @@ def test_chunk_loss_fallback(sess):
     sess.run("train", steps=1)
     man = sess.graph.manifest_of(("model/w",), c1)
     sess.store.delete_chunk(man["base"]["chunks"][0]["key"])
+    # drop the shared chunk cache too: it would (correctly) mask the
+    # storage incident; this test targets the replay fallback
+    sess.chunk_cache.clear()
+    sess.chunk_cache.max_bytes = 0
     sess.checkout(c1)
     assert np.allclose(sess.ns["model/w"], w1)
     assert sess.restorer.replays >= 1
@@ -154,6 +158,8 @@ def test_recursive_fallback():
         man = s.graph.manifest_of(key, ver)
         for ch in man["base"]["chunks"]:
             store.delete_chunk(ch["key"])
+    s.chunk_cache.clear()              # cache would mask the storage loss
+    s.chunk_cache.max_bytes = 0
     # move away and delete things so checkout must load
     def clobber(ns):
         ns["b"] = np.zeros(1, np.float32)

@@ -89,10 +89,13 @@ def test_fallback_after_storage_loss():
     expected = s.ns["models/m0"].copy()
     s.run("clean", i=0)                            # moves on; m0 unchanged
     c3 = s.run("fit", i=0)                         # new version of m0
-    # destroy ALL chunks of m0@c1, then time-travel back
+    # destroy ALL chunks of m0@c1, then time-travel back (cache dropped
+    # too — it would otherwise serve the lost chunks from memory)
     man = s.graph.manifest_of(("models/m0",), c1)
     for ch in man["base"]["chunks"]:
         store.delete_chunk(ch["key"])
+    s.chunk_cache.clear()
+    s.chunk_cache.max_bytes = 0
     s.checkout(c1)
     assert np.array_equal(s.ns["models/m0"], expected)
     assert s.restorer.replays >= 1

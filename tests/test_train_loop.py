@@ -93,6 +93,10 @@ def test_chunk_loss_during_training_falls_back(tied_cfg):
         tuple(sorted(["state/params/embed", "state/params/lm_head"])), c1)
     for ch in man["base"]["chunks"]:
         store.delete_chunk(ch["key"])
+    # drop the shared chunk cache too: it would (correctly) mask the
+    # storage incident; this test targets the replay fallback
+    s.kishu.chunk_cache.clear()
+    s.kishu.chunk_cache.max_bytes = 0
     s.checkout(c1)
     assert np.array_equal(np.asarray(s.ns["state/params/embed"]), w1)
     assert s.kishu.restorer.replays >= 1
