@@ -1,0 +1,270 @@
+"""Storage fabric: scatter-gather checkout bandwidth + replica-loss restore.
+
+Bandwidth story: a chunk store is ultimately a *device* with one queue — a
+single disk serves its reads one at a time no matter how many threads ask.
+``DeviceStore`` models that (per-store lock + fixed per-chunk service time),
+so the comparison is honest on CI machines with one physical disk: the
+baseline is one device holding everything; the fabric is a consistent-hash
+ring over N such devices, where scatter-gather ``get_chunks`` drives all N
+queues concurrently.  Checkout wall time on the paper's ~10%-dirty workload
+then tracks aggregate device bandwidth: N shards ≈ N× the read throughput.
+``smoke()`` asserts the ≥1.5× bar for a 4-shard fabric vs a single
+DirectoryStore, restores verified bit-identical in every configuration.
+
+Fault story: a 2-way replica set loses one full replica (chunks wiped, and
+separately a ``FaultInjectedStore`` failing every read); checkout must
+restore bit-identically off the surviving replica while read-repair heals
+the chunks it touches, and ``scrub --repair`` + a clean ``scrub`` finish the
+job — 0 problems afterward.  These rows are what CI's fabric smoke job pins.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import threading
+import time
+from typing import List
+
+from repro.core.chunkstore import ChunkStore, DirectoryStore
+
+
+class DeviceStore(ChunkStore):
+    """One storage device: a wrapped backend whose reads are serialized by a
+    device-level queue (lock) and cost ``read_latency_s`` per chunk.  Writes
+    are not throttled — the benchmark isolates checkout (read) bandwidth."""
+
+    supports_parallel_get = True
+
+    def __init__(self, inner: ChunkStore, read_latency_s: float):
+        self.inner = inner
+        self.read_latency_s = read_latency_s
+        self.min_slab = getattr(inner, "min_slab", 1)
+        self._q = threading.Lock()
+        self.chunks_served = 0
+
+    def get_chunk(self, key):
+        with self._q:
+            time.sleep(self.read_latency_s)
+            self.chunks_served += 1
+            return self.inner.get_chunk(key)
+
+    def get_chunks(self, keys, *, missing_ok=False):
+        uniq = list(dict.fromkeys(keys))
+        with self._q:
+            time.sleep(self.read_latency_s * len(uniq))
+            self.chunks_served += len(uniq)
+            return self.inner.get_chunks(uniq, missing_ok=missing_ok)
+
+    def put_chunk(self, key, data):
+        return self.inner.put_chunk(key, data)
+
+    def put_chunks(self, pairs):
+        return self.inner.put_chunks(pairs)
+
+    def has_chunk(self, key):
+        return self.inner.has_chunk(key)
+
+    def list_chunk_keys(self):
+        return self.inner.list_chunk_keys()
+
+    def chunk_sizes(self, keys):
+        return self.inner.chunk_sizes(keys)
+
+    def delete_chunk(self, key):
+        self.inner.delete_chunk(key)
+
+    def delete_chunks(self, keys):
+        return self.inner.delete_chunks(keys)
+
+    def put_meta(self, name, doc):
+        self.inner.put_meta(name, doc)
+
+    def get_meta(self, name):
+        return self.inner.get_meta(name)
+
+    def list_meta(self, prefix):
+        return self.inner.list_meta(prefix)
+
+    def chunk_bytes_total(self):
+        return self.inner.chunk_bytes_total()
+
+    def n_chunks(self):
+        return self.inner.n_chunks()
+
+
+def _make_session(store, chunk_bytes):
+    from repro.core import KishuSession
+    return KishuSession(store, chunk_bytes=chunk_bytes, cache_bytes=0)
+
+
+def _dirty_workload(sess, n_covs, elems, chunk_bytes, dirty_frac):
+    import numpy as np
+
+    elem_bytes = 4
+    chunks_per_cov = -(-elems * elem_bytes // chunk_bytes)
+    dirty_chunks = max(1, int(round(chunks_per_cov * dirty_frac)))
+    chunk_elems = chunk_bytes // elem_bytes
+
+    def init(ns, seed):
+        rng = np.random.default_rng(seed)
+        for i in range(n_covs):
+            ns[f"v{i:02d}"] = rng.standard_normal(elems).astype(np.float32)
+
+    def mutate(ns, seed):
+        rng = np.random.default_rng(seed)
+        for i in range(n_covs):
+            a = ns[f"v{i:02d}"]
+            for c in range(dirty_chunks):
+                a[c * chunk_elems] = rng.standard_normal()
+
+    sess.register("init", init)
+    sess.register("mutate", mutate)
+
+
+def _snapshot(sess):
+    import numpy as np
+    return {n: np.asarray(sess.ns[n]).tobytes() for n in sess.ns.names()}
+
+
+def run_scatter_gather(n_shards: int = 4, n_covs: int = 8,
+                       elems: int = 1 << 16, chunk_bytes: int = 1 << 12,
+                       dirty_frac: float = 0.1, repeats: int = 3,
+                       read_latency_s: float = 0.003) -> List[dict]:
+    """Checkout wall time: single device vs an N-shard fabric of devices."""
+    from repro.core.fabric import ShardedStore
+
+    rows: List[dict] = []
+    tmp = tempfile.mkdtemp(prefix="kishu_fabric_")
+    try:
+        for config in ("single", f"shard{n_shards}"):
+            if config == "single":
+                store = DeviceStore(
+                    DirectoryStore(os.path.join(tmp, "single")),
+                    read_latency_s)
+                devices = [store]
+            else:
+                devices = [DeviceStore(
+                    DirectoryStore(os.path.join(tmp, f"s{i}")),
+                    read_latency_s) for i in range(n_shards)]
+                store = ShardedStore(devices)
+            sess = _make_session(store, chunk_bytes)
+            _dirty_workload(sess, n_covs, elems, chunk_bytes, dirty_frac)
+            sess.init_state({})
+            prev = sess.run("init", seed=1)
+            prev_snap = _snapshot(sess)
+            wall = 0.0
+            moved = 0
+            identical = True
+            for r in range(repeats):
+                cur = sess.run("mutate", seed=100 + r)
+                cur_snap = _snapshot(sess)
+                t0 = time.perf_counter()
+                st = sess.checkout(prev)            # hop back
+                wall += time.perf_counter() - t0
+                moved += st.bytes_loaded
+                identical = identical and _snapshot(sess) == prev_snap
+                t0 = time.perf_counter()
+                sess.checkout(cur)                  # hop forward
+                wall += time.perf_counter() - t0
+                identical = identical and _snapshot(sess) == cur_snap
+                prev, prev_snap = cur, cur_snap
+            sess.close()
+            rows.append({
+                "bench": "fabric",
+                "workload": f"partial_dirty_{dirty_frac:g}",
+                "config": config, "n_devices": len(devices),
+                "read_latency_ms": read_latency_s * 1e3,
+                "checkout_wall_s": round(wall, 4),
+                "bytes_moved": moved,
+                "chunks_served": sum(d.chunks_served for d in devices),
+                "identical": identical,
+            })
+        single = next(r for r in rows if r["config"] == "single")
+        fabric = next(r for r in rows if r["config"] != "single")
+        rows.append({
+            "bench": "fabric", "workload": single["workload"],
+            "config": f"speedup_shard{n_shards}_vs_single",
+            "checkout_speedup": round(single["checkout_wall_s"]
+                                      / max(fabric["checkout_wall_s"], 1e-9),
+                                      3),
+            "identical": single["identical"] and fabric["identical"],
+        })
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+    return rows
+
+
+def run_replica_loss(n_covs: int = 4, elems: int = 1 << 14,
+                     chunk_bytes: int = 1 << 12) -> List[dict]:
+    """Restore with one full replica down, both loss modes: chunks wiped
+    from disk, and a FaultInjectedStore failing every read."""
+    from repro.core import FaultInjectedStore, open_store
+    from repro.core.fabric import ReplicatedStore, scrub
+
+    rows: List[dict] = []
+    for mode in ("wiped", "fault_injected"):
+        tmp = tempfile.mkdtemp(prefix="kishu_rloss_")
+        try:
+            uri = f"fabric://rep(dir://{tmp}/r0,dir://{tmp}/r1)"
+            sess = _make_session(open_store(uri), chunk_bytes)
+            _dirty_workload(sess, n_covs, elems, chunk_bytes, 0.1)
+            sess.init_state({})
+            c1 = sess.run("init", seed=1)
+            snap1 = _snapshot(sess)
+            sess.run("mutate", seed=2)
+            sess.close()
+
+            if mode == "wiped":
+                shutil.rmtree(os.path.join(tmp, "r0", "chunks"))
+                os.makedirs(os.path.join(tmp, "r0", "chunks"))
+                store = open_store(uri)
+            else:
+                store = ReplicatedStore([
+                    FaultInjectedStore(
+                        DirectoryStore(os.path.join(tmp, "r0")),
+                        fail_get=lambda k: True),
+                    DirectoryStore(os.path.join(tmp, "r1"))])
+            sess = _make_session(store, chunk_bytes)
+            _dirty_workload(sess, n_covs, elems, chunk_bytes, 0.1)
+            t0 = time.perf_counter()
+            sess.checkout(c1)
+            wall = time.perf_counter() - t0
+            identical = _snapshot(sess) == snap1
+            sess.close()
+
+            # heal the rest of the store, then demand a clean bill
+            fresh = open_store(uri)
+            scrub(fresh, repair=True)
+            problems_after = scrub(fresh, deep=True).problems
+            rows.append({
+                "bench": "fabric", "workload": f"replica_loss_{mode}",
+                "config": "rep2_one_down",
+                "checkout_wall_s": round(wall, 4),
+                "identical": identical,
+                "scrub_problems_after_repair": problems_after,
+            })
+        finally:
+            shutil.rmtree(tmp, ignore_errors=True)
+    return rows
+
+
+def run(**kw) -> List[dict]:
+    return run_scatter_gather(**kw) + run_replica_loss()
+
+
+def smoke() -> List[dict]:
+    """CI gate: ≥1.5× checkout throughput for a 4-shard fabric vs a single
+    DirectoryStore on the 10%-dirty workload, bit-identical restores
+    everywhere, and the replica-loss path healing to 0 scrub problems."""
+    rows = run_scatter_gather(repeats=2) + run_replica_loss()
+    assert all(r["identical"] for r in rows if "identical" in r), \
+        "restore not bit-identical"
+    speedup = next(r["checkout_speedup"] for r in rows
+                   if "checkout_speedup" in r)
+    assert speedup >= 1.5, (
+        f"4-shard fabric checkout speedup {speedup} < 1.5x")
+    for r in rows:
+        if r["workload"].startswith("replica_loss"):
+            assert r["scrub_problems_after_repair"] == 0, r
+    return rows

@@ -83,6 +83,16 @@ def bench_delta(quick: bool):
     return rows
 
 
+def bench_fabric(quick: bool):
+    """Storage fabric: scatter-gather checkout speedup (N-shard ring of
+    device-modeled stores vs one device) + replica-loss restore/heal rows.
+    Writes BENCH_fabric.json."""
+    from benchmarks import bench_fabric as b
+    rows = b.run(repeats=2) if quick else b.run()
+    _write_bench_json("BENCH_fabric.json", rows)
+    return rows
+
+
 def bench_tracking(quick: bool):
     """Table 6 / Fig 17 (tracking overhead)."""
     from benchmarks import bench_tracking as b
@@ -143,6 +153,7 @@ ALL = {
     "ckpt": bench_ckpt,
     "ckpt_io": bench_ckpt_io,
     "delta": bench_delta,
+    "fabric": bench_fabric,
     "tracking": bench_tracking,
     "covar_sweep": bench_covar_sweep,
     "scalability": bench_scalability,
@@ -158,6 +169,10 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI gate: delta-pipeline bytes-moved "
                          "assertions + BENCH_*.json artifacts")
+    ap.add_argument("--smoke-fabric", action="store_true",
+                    help="fast CI gate: storage-fabric scatter-gather "
+                         "speedup + replica-loss restore assertions + "
+                         "BENCH_fabric.json")
     args = ap.parse_args()
     if args.smoke:
         from benchmarks import bench_delta as b
@@ -165,6 +180,13 @@ def main() -> None:
         _print_rows(rows)
         _emit_delta_artifacts(rows)
         print("# delta smoke OK", flush=True)
+        return
+    if args.smoke_fabric:
+        from benchmarks import bench_fabric as b
+        rows = b.smoke()        # raises AssertionError on regression
+        _print_rows(rows)
+        _write_bench_json("BENCH_fabric.json", rows)
+        print("# fabric smoke OK", flush=True)
         return
     names = [args.only] if args.only else list(ALL)
     for name in names:

@@ -15,6 +15,9 @@ from repro.core.chunkstore import (ChunkCache, ChunkStore, CompressedStore,
                                    DirectoryStore, FaultInjectedStore,
                                    MemoryStore, SQLiteStore,
                                    available_codecs, open_store)
+from repro.core.fabric import (HashRing, ReplicatedStore, ScrubReport,
+                               ShardedStore, TieredStore, parse_topology,
+                               rebalance, scrub)
 from repro.core.covariable import (CovKey, LeafRecord, RecordBuilder,
                                    StateDelta, cov_key, detect_delta,
                                    group_covariables)
@@ -36,4 +39,6 @@ __all__ = [
     "TrackedNamespace", "flatten_tree", "unflatten_tree",
     "ChunkMissingError", "OpaqueLeaf", "SerializationError", "KishuSession",
     "RunStats", "DetReplaySession", "DumpSession", "PageIncremental",
+    "HashRing", "ReplicatedStore", "ScrubReport", "ShardedStore",
+    "TieredStore", "parse_topology", "rebalance", "scrub",
 ]

@@ -233,6 +233,12 @@ class ChunkCache:
                 out[k] = data
         return out
 
+    def discard(self, key: str) -> None:
+        with self._lock:
+            old = self._d.pop(key, None)
+            if old is not None:
+                self._bytes -= len(old)
+
     def clear(self) -> None:
         with self._lock:
             self._d.clear()
@@ -256,16 +262,30 @@ class ChunkStore:
         the checkout pipeline then takes the serial path.
       - ``min_slab``: minimum keys per batched fetch — backends with
         per-statement overhead (SQL) want large slabs to amortize it.
+      - ``native_scatter``: True when ``get_chunks`` drives its own
+        cross-device concurrency (the sharded fabric's scatter-gather);
+        bulk fetches then hand the store the whole key set in one call —
+        slicing it into slabs would only add synchronization barriers on
+        top of the store's internal parallelism.
     """
 
     supports_parallel_get = True
     min_slab = 1
+    native_scatter = False
 
     def put_chunk(self, key: str, data: bytes) -> bool:
         raise NotImplementedError
 
     def get_chunk(self, key: str) -> bytes:
         raise NotImplementedError
+
+    def get_chunk_stored(self, key: str) -> bytes:
+        """The chunk's *stored* representation (codec frame included), for
+        replication/placement machinery that moves chunks between backends:
+        healing with decoded bytes would silently drop compression.  The
+        default degrades to the decoded form — correct, since frames decode
+        transparently on read, just not byte-preserving."""
+        return self.get_chunk(key)
 
     def has_chunk(self, key: str) -> bool:
         raise NotImplementedError
@@ -321,6 +341,18 @@ class ChunkStore:
     def delete_chunk(self, key: str) -> None:
         raise NotImplementedError
 
+    def delete_chunks(self, keys: Sequence[str]) -> int:
+        """Delete many chunks with backend-native batching (one SQL
+        ``executemany``, pooled unlinks); returns the number of chunks
+        actually removed.  The GC paths (``KishuSession.gc`` / CLI ``gc``)
+        call this instead of looping ``delete_chunk``."""
+        removed = 0
+        for k in keys:
+            if self.has_chunk(k):
+                self.delete_chunk(k)
+                removed += 1
+        return removed
+
     # ---- stats ----
     def chunk_bytes_total(self) -> int:
         raise NotImplementedError
@@ -352,6 +384,12 @@ class MemoryStore(ChunkStore):
         except KeyError:
             raise ChunkMissingError(key) from None
 
+    def get_chunk_stored(self, key):
+        try:
+            return self.chunks[key]
+        except KeyError:
+            raise ChunkMissingError(key) from None
+
     def get_chunks(self, keys, *, missing_ok=False):
         chunks = self.chunks
         if missing_ok:
@@ -373,6 +411,9 @@ class MemoryStore(ChunkStore):
 
     def delete_chunk(self, key):
         self.chunks.pop(key, None)
+
+    def delete_chunks(self, keys):
+        return sum(self.chunks.pop(k, None) is not None for k in keys)
 
     def put_meta(self, name, doc):
         self.meta[name] = json.loads(json.dumps(doc))
@@ -414,6 +455,13 @@ class DirectoryStore(ChunkStore):
         try:
             with open(self._chunk_path(key), "rb") as f:
                 return decode_chunk(f.read())
+        except FileNotFoundError:
+            raise ChunkMissingError(key) from None
+
+    def get_chunk_stored(self, key):
+        try:
+            with open(self._chunk_path(key), "rb") as f:
+                return f.read()
         except FileNotFoundError:
             raise ChunkMissingError(key) from None
 
@@ -461,6 +509,16 @@ class DirectoryStore(ChunkStore):
             os.remove(self._chunk_path(key))
         except FileNotFoundError:
             pass
+
+    def delete_chunks(self, keys):
+        # pooled unlinks: each remove releases the GIL in the syscall
+        def rm_one(key):
+            try:
+                os.remove(self._chunk_path(key))
+                return True
+            except FileNotFoundError:
+                return False
+        return sum(parallel.map_parallel(rm_one, list(keys)))
 
     def _meta_path(self, name: str) -> str:
         return os.path.join(self.root, "meta", name.replace("/", "__") + ".json")
@@ -530,6 +588,13 @@ class SQLiteStore(ChunkStore):
             raise ChunkMissingError(key)
         return decode_chunk(bytes(row[0]))
 
+    def get_chunk_stored(self, key):
+        row = self._con().execute(
+            "SELECT data FROM chunks WHERE key=?", (key,)).fetchone()
+        if row is None:
+            raise ChunkMissingError(key)
+        return bytes(row[0])
+
     def has_chunk(self, key):
         return self._con().execute(
             "SELECT 1 FROM chunks WHERE key=?", (key,)).fetchone() is not None
@@ -586,6 +651,15 @@ class SQLiteStore(ChunkStore):
         con.execute("DELETE FROM chunks WHERE key=?", (key,))
         con.commit()
 
+    def delete_chunks(self, keys):
+        # one transaction for the whole sweep: a single fsync, like put_chunks
+        con = self._con()
+        before = con.total_changes
+        con.executemany("DELETE FROM chunks WHERE key=?",
+                        [(k,) for k in keys])
+        con.commit()
+        return con.total_changes - before
+
     def put_meta(self, name, doc):
         con = self._con()
         con.execute("INSERT OR REPLACE INTO meta VALUES (?, ?)",
@@ -625,6 +699,7 @@ class CompressedStore(ChunkStore):
         self.min_slab = getattr(inner, "min_slab", 1)
         self.supports_parallel_get = getattr(inner, "supports_parallel_get",
                                              True)
+        self.native_scatter = getattr(inner, "native_scatter", False)
         self.logical_put_bytes = 0
         self.stored_put_bytes = 0
 
@@ -643,6 +718,9 @@ class CompressedStore(ChunkStore):
     def get_chunk(self, key):
         return self.inner.get_chunk(key)
 
+    def get_chunk_stored(self, key):
+        return self.inner.get_chunk_stored(key)
+
     def get_chunks(self, keys, *, missing_ok=False):
         return self.inner.get_chunks(keys, missing_ok=missing_ok)
 
@@ -657,6 +735,9 @@ class CompressedStore(ChunkStore):
 
     def delete_chunk(self, key):
         self.inner.delete_chunk(key)
+
+    def delete_chunks(self, keys):
+        return self.inner.delete_chunks(keys)
 
     def put_meta(self, name, doc):
         self.inner.put_meta(name, doc)
@@ -723,6 +804,13 @@ class FaultInjectedStore(ChunkStore):
             raise ChunkMissingError(f"injected failure: {key}")
         return self.inner.get_chunk(key)
 
+    def get_chunk_stored(self, key):
+        if self.read_delay:
+            time.sleep(self.read_delay)
+        if self.fail_get(key):
+            raise ChunkMissingError(f"injected failure: {key}")
+        return self.inner.get_chunk_stored(key)
+
     def list_chunk_keys(self):
         return self.inner.list_chunk_keys()
 
@@ -752,15 +840,21 @@ class FaultInjectedStore(ChunkStore):
 
 
 def open_store(uri: str, codec=None) -> ChunkStore:
-    """"memory://", "dir:///path", "sqlite:///path.db" or a bare path.
+    """"memory://", "dir:///path", "sqlite:///path.db", a bare path, or a
+    "fabric://TOPOLOGY" composition (fabric.py) — e.g.
+    ``fabric://shard(dir:///s0,dir:///s1)`` or ``fabric://rep(a,b)``.
 
     A ``?codec=NAME`` suffix (or the ``codec`` argument) wraps the store in
-    :class:`CompressedStore` — e.g. ``sqlite:///ckpt.db?codec=auto``.
-    Reading never needs the suffix: frames are decoded transparently."""
+    :class:`CompressedStore` — e.g. ``sqlite:///ckpt.db?codec=auto`` or
+    ``fabric://shard(...)?codec=zlib``.  Reading never needs the suffix:
+    frames are decoded transparently."""
     if "?codec=" in uri:
         uri, _, codec = uri.partition("?codec=")
-    if uri == "memory://" or uri == ":memory:":
-        store: ChunkStore = MemoryStore()
+    if uri.startswith("fabric://"):
+        from repro.core.fabric import parse_topology
+        store: ChunkStore = parse_topology(uri[len("fabric://"):])
+    elif uri == "memory://" or uri == ":memory:":
+        store = MemoryStore()
     elif uri.startswith("sqlite://"):
         store = SQLiteStore(uri[len("sqlite://"):])
     elif uri.startswith("dir://"):

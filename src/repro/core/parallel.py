@@ -60,7 +60,17 @@ _POOL_SIZE = 16          # shared-pool capacity; per-call windows bound usage
 _pool: Optional[ThreadPoolExecutor] = None
 _pool_lock = threading.Lock()
 
+# Dedicated scatter-gather pool for the storage fabric (fabric.py).  Fabric
+# concurrency is *topology-shaped* — one in-flight request per shard/replica,
+# possibly issued from inside a checkout pipeline worker — so it must not
+# share capacity with (or wait on) the chunk I/O pool: a fabric task queued
+# behind the very pipeline worker awaiting it would deadlock.
+_FABRIC_POOL_SIZE = 16
+_fabric_pool: Optional[ThreadPoolExecutor] = None
+_fabric_lock = threading.Lock()
+
 _worker_state = threading.local()
+_fabric_state = threading.local()
 
 
 def _shared_pool() -> ThreadPoolExecutor:
@@ -72,6 +82,49 @@ def _shared_pool() -> ThreadPoolExecutor:
                     max_workers=_POOL_SIZE,
                     thread_name_prefix="kishu-io")
     return _pool
+
+
+def _fabric_shared_pool() -> ThreadPoolExecutor:
+    global _fabric_pool
+    if _fabric_pool is None:
+        with _fabric_lock:
+            if _fabric_pool is None:
+                _fabric_pool = ThreadPoolExecutor(
+                    max_workers=_FABRIC_POOL_SIZE,
+                    thread_name_prefix="kishu-fabric")
+    return _fabric_pool
+
+
+def in_fabric_worker() -> bool:
+    """True on a fabric scatter thread (nested fabrics degrade to serial)."""
+    return getattr(_fabric_state, "is_worker", False)
+
+
+def scatter_parallel(fn: Callable[[Any], Any], items: Sequence[Any]
+                     ) -> List[Any]:
+    """Ordered scatter-gather over fabric children (shards / replicas /
+    tiers): one task per item on the dedicated fabric pool, all driven
+    concurrently, results gathered in order.  The first child exception
+    propagates.
+
+    Scatter tasks are tagged both as fabric workers (a nested fabric — a
+    replica set inside a shard ring — runs its own scatter serially instead
+    of re-entering the pool) and as I/O workers (``serial_section``), so leaf
+    backends' native batching degrades to plain loops: each child store
+    behaves like one device that serializes its own requests, and all
+    cross-device concurrency lives here, bounded by the topology's width.
+    """
+    items = list(items)
+    if len(items) <= 1 or in_fabric_worker():
+        return [fn(it) for it in items]
+
+    def run(it):
+        _fabric_state.is_worker = True
+        with serial_section():
+            return fn(it)
+
+    futs = [_fabric_shared_pool().submit(run, it) for it in items]
+    return [f.result() for f in futs]
 
 
 def resolve_io_threads(n: Optional[int] = None) -> int:
@@ -162,8 +215,12 @@ def fetch_chunks(store, keys: Sequence[str],
     uniq = list(dict.fromkeys(keys))
     workers = resolve_io_threads(max_workers)
     min_slab = getattr(store, "min_slab", 1)
-    if not getattr(store, "supports_parallel_get", True) or workers <= 1 \
+    if getattr(store, "native_scatter", False) \
+            or not getattr(store, "supports_parallel_get", True) \
+            or workers <= 1 \
             or in_io_worker() or len(uniq) <= max(min_slab, workers):
+        # native_scatter: the store fans the whole request out across its
+        # devices itself — one call maximizes its load balance
         return store.get_chunks(uniq, missing_ok=missing_ok)
     slabs = iter_slabs(uniq, max(min_slab, slab_size_for(len(uniq), workers)))
     out: dict = {}

@@ -224,13 +224,14 @@ class KishuSession:
     def gc(self) -> dict:
         """Content-addressed garbage collection: drop chunks referenced by
         no live manifest (after branch deletion / history truncation).
-        Enumerates through ``list_chunk_keys()``, so every backend —
-        including the single-file SQLite deployment — reclaims space."""
+        Enumerates through ``list_chunk_keys()`` and deletes through the
+        batched ``delete_chunks()`` — so every backend (single-file SQLite,
+        sharded/replicated fabrics) reclaims space, and a fabric sweeps all
+        its shards and replicas, strays included."""
         live = self.graph.live_chunk_keys()
         dead = [k for k in self.store.list_chunk_keys() if k not in live]
         freed = sum(self.store.chunk_sizes(dead).values())
-        for k in dead:
-            self.store.delete_chunk(k)
+        self.store.delete_chunks(dead)
         return {"chunks_dropped": len(dead), "bytes_freed": freed,
                 "chunks_live": len(live)}
 

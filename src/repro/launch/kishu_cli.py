@@ -6,12 +6,22 @@
     python -m repro.launch.kishu_cli --store ... stats
     python -m repro.launch.kishu_cli --store ... verify [--commit cXXXXX]
     python -m repro.launch.kishu_cli --store ... gc
+    python -m repro.launch.kishu_cli --store fabric://... topology
+    python -m repro.launch.kishu_cli --store fabric://... scrub [--repair]
+    python -m repro.launch.kishu_cli --store fabric://... rebalance
+
+Every subcommand shares ``open_store``, so any store URI works anywhere —
+including ``?codec=`` suffixes and ``fabric://`` compositions.
 
 ``verify`` checks that every chunk referenced by a state's manifests is
-present and content-addressed correctly — the operator's answer to "can I
-still restore this run?" after storage incidents (missing chunks are
-reported per co-variable; they will restore via fallback recomputation as
-long as the command registry is available).
+present (``--deep``: fetched in bulk through the parallel engine and
+content-address-checked) — the operator's answer to "can I still restore
+this run?" after storage incidents (missing chunks are reported per
+co-variable; they will restore via fallback recomputation as long as the
+command registry is available).  The fleet verbs ``topology`` / ``scrub`` /
+``rebalance`` operate on the storage fabric itself: print the composition
+tree, find-and-heal replica-missing / misplaced / corrupt chunks, and move
+chunks to their ring homes after a topology edit.
 """
 from __future__ import annotations
 
@@ -19,6 +29,7 @@ import argparse
 import sys
 from typing import Optional
 
+from repro.core import fabric, parallel
 from repro.core.chunkstore import chunk_key, open_store
 from repro.core.graph import CheckpointGraph, parse_key
 
@@ -97,7 +108,10 @@ def cmd_stats(store, graph: CheckpointGraph, args) -> int:
 
 def cmd_verify(store, graph: CheckpointGraph, args) -> int:
     commits = [args.commit] if args.commit else sorted(graph.nodes)
-    bad = 0
+    # plan every referenced chunk up front, then resolve presence (and, with
+    # --deep, content) in bulk: batched metadata / scatter-gather fetches
+    # through the parallel engine instead of one store round-trip per chunk
+    refs = []                     # (cid, names, chunk_key, logical_n)
     for cid in commits:
         node = graph.nodes.get(cid)
         if node is None:
@@ -108,14 +122,35 @@ def cmd_verify(store, graph: CheckpointGraph, args) -> int:
                 continue
             names = "+".join(parse_key(ks))
             for c in man["base"]["chunks"]:
-                if not store.has_chunk(c["key"]):
-                    print(f"MISSING {cid} {names} chunk {c['key']}")
-                    bad += 1
-                elif args.deep:
-                    data = store.get_chunk(c["key"])
-                    if chunk_key(data) != c["key"] or len(data) != c["n"]:
-                        print(f"CORRUPT {cid} {names} chunk {c['key']}")
-                        bad += 1
+                refs.append((cid, names, c["key"], int(c["n"])))
+    uniq = list(dict.fromkeys(r[2] for r in refs))
+    if args.deep:
+        # streamed in slabs: bulk scatter-gather fetches without ever
+        # holding more than a window of chunks in memory (a deep verify
+        # of a multi-GB CAS must not materialize the whole store)
+        want_n = {r[2]: r[3] for r in refs}
+        present, corrupt = set(), set()
+        for got in parallel.prefetch_map(
+                lambda slab: store.get_chunks(slab, missing_ok=True),
+                parallel.iter_slabs(
+                    uniq, max(getattr(store, "min_slab", 1), 32))):
+            for k, d in got.items():
+                present.add(k)
+                if chunk_key(d) != k or len(d) != want_n[k]:
+                    corrupt.add(k)
+    else:
+        # chunk_sizes is metadata-only and backend-batched (one SQL pass,
+        # pooled stats, sharded scatter) — presence without moving data
+        present = set(store.chunk_sizes(uniq))
+        corrupt = set()
+    bad = 0
+    for cid, names, key, _ in refs:
+        if key not in present:
+            print(f"MISSING {cid} {names} chunk {key}")
+            bad += 1
+        elif key in corrupt:
+            print(f"CORRUPT {cid} {names} chunk {key}")
+            bad += 1
     print(f"verify: {'OK' if bad == 0 else f'{bad} problems'} "
           f"({len(commits)} commits)")
     return 0 if bad == 0 else 2
@@ -123,14 +158,39 @@ def cmd_verify(store, graph: CheckpointGraph, args) -> int:
 
 def cmd_gc(store, graph: CheckpointGraph, args) -> int:
     # session-less GC: the mark set is shared with KishuSession.gc(); chunk
-    # enumeration is backend-native (works on sqlite:// stores too)
+    # enumeration and the delete sweep are backend-native batched ops
+    # (works on sqlite:// stores and whole fabrics alike)
     live = graph.live_chunk_keys()
     dead = [k for k in store.list_chunk_keys() if k not in live]
     if not args.dry_run:
-        for k in dead:
-            store.delete_chunk(k)
+        store.delete_chunks(dead)
     print(f"gc: {'would drop' if args.dry_run else 'dropped'} {len(dead)} "
           f"chunks ({len(live)} live)")
+    return 0
+
+
+def cmd_topology(store, args) -> int:
+    print("\n".join(fabric.topology_lines(store)))
+    return 0
+
+
+def cmd_scrub(store, args) -> int:
+    rep = fabric.scrub(store, repair=args.repair, deep=args.deep)
+    for line in rep.details[:args.limit]:
+        print(f"  {line}")
+    if len(rep.details) > args.limit:
+        print(f"  ... {len(rep.details) - args.limit} more")
+    print(f"scrub: {rep.problems} problems "
+          f"({rep.replica_missing} replica-missing, {rep.misplaced} "
+          f"misplaced, {rep.corrupt} corrupt) across {rep.chunks_checked} "
+          f"chunks; {rep.repaired} repaired, {rep.remaining} remaining")
+    return 0 if rep.remaining == 0 else 2
+
+
+def cmd_rebalance(store, args) -> int:
+    out = fabric.rebalance(store)
+    print(f"rebalance: moved {out['chunks_moved']} of "
+          f"{out['chunks_checked']} chunks to their ring homes")
     return 0
 
 
@@ -152,9 +212,23 @@ def main(argv: Optional[list] = None) -> int:
     p.add_argument("--deep", action="store_true")
     p = sub.add_parser("gc")
     p.add_argument("--dry-run", action="store_true")
+    sub.add_parser("topology")
+    p = sub.add_parser("scrub")
+    p.add_argument("--repair", action="store_true")
+    p.add_argument("--deep", action="store_true")
+    p.add_argument("--limit", type=int, default=20,
+                   help="max per-chunk problem lines to print")
+    sub.add_parser("rebalance")
     args = ap.parse_args(argv)
 
     store = open_store(args.store)
+    # fleet verbs operate on the store itself — no graph required
+    if args.cmd == "topology":
+        return cmd_topology(store, args)
+    if args.cmd == "scrub":
+        return cmd_scrub(store, args)
+    if args.cmd == "rebalance":
+        return cmd_rebalance(store, args)
     graph = CheckpointGraph(store)
     if args.cmd == "log":
         return cmd_log(graph, args)

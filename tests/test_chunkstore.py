@@ -59,6 +59,20 @@ def test_delete_chunk(store):
     store.delete_chunk(k)                          # idempotent
 
 
+def test_delete_chunks_batched(store):
+    pairs = [(chunk_key(bytes([i]) * 50), bytes([i]) * 50)
+             for i in range(20)]
+    assert store.put_chunks(pairs) == 20
+    doomed = [k for k, _ in pairs[:15]]
+    # batched delete: backend-native (executemany / pooled unlink); counts
+    # removals and is idempotent on re-delete and unknown keys
+    assert store.delete_chunks(doomed + ["f" * 32]) == 15
+    assert store.delete_chunks(doomed) == 0
+    assert store.n_chunks() == 5
+    for k, _ in pairs[15:]:
+        assert store.has_chunk(k)
+
+
 def test_fault_injection():
     inner = MemoryStore()
     bad = {"victim"}

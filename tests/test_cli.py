@@ -73,3 +73,51 @@ def test_bad_commit_errors(store_uri):
     uri, _ = store_uri
     assert cli(["--store", uri, "show", "c99999"]) == 1
     assert cli(["--store", uri, "diff", "c99999", "c00000"]) == 1
+
+
+# ---------------------------------------------------------------------------
+# --store URI handling: ?codec= and fabric:// must work for EVERY subcommand
+# (they all share open_store — this pins that contract)
+# ---------------------------------------------------------------------------
+
+def _build_history(uri):
+    s = KishuSession(open_store(uri), chunk_bytes=1 << 10)
+
+    def set_val(ns, name, val):
+        ns[name] = np.full(500, float(val), np.float32)
+    s.register("set_val", set_val)
+    s.init_state({})
+    s.run("set_val", name="x", val=1)
+    s.run("set_val", name="y", val=2)
+    s.close()
+    return s
+
+
+@pytest.fixture(params=["sqlite_codec", "fabric", "fabric_codec"])
+def any_store_uri(request, tmp_path):
+    uri = {
+        "sqlite_codec": f"sqlite://{tmp_path}/cas.db?codec=zlib",
+        "fabric": f"fabric://shard(dir://{tmp_path}/s0,dir://{tmp_path}/s1)",
+        "fabric_codec": (f"fabric://rep(dir://{tmp_path}/r0,"
+                         f"dir://{tmp_path}/r1)?codec=zlib"),
+    }[request.param]
+    return uri, _build_history(uri)
+
+
+def test_every_subcommand_accepts_uri(any_store_uri, capsys):
+    uri, s = any_store_uri
+    nodes = sorted(s.graph.nodes)
+    assert cli(["--store", uri, "log"]) == 0
+    assert "set_val" in capsys.readouterr().out
+    assert cli(["--store", uri, "show", s.graph.head]) == 0
+    assert "upd y" in capsys.readouterr().out
+    assert cli(["--store", uri, "diff", nodes[-2], nodes[-1]]) == 0
+    assert "diverged" in capsys.readouterr().out
+    assert cli(["--store", uri, "stats"]) == 0
+    assert "chunks" in capsys.readouterr().out
+    assert cli(["--store", uri, "verify", "--deep"]) == 0
+    assert "OK" in capsys.readouterr().out
+    assert cli(["--store", uri, "gc", "--dry-run"]) == 0
+    assert "would drop 0" in capsys.readouterr().out
+    assert cli(["--store", uri, "topology"]) == 0
+    assert cli(["--store", uri, "scrub"]) == 0

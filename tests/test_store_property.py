@@ -1,0 +1,120 @@
+"""Cross-backend store-composition properties.
+
+Any composition of the store zoo — plain backends, compressed, fault-free
+wrappers, sharded rings, replica sets, tiers, and nestings thereof — must
+expose identical ChunkStore semantics:
+
+  P1  put/get round-trips logical bytes exactly (batched and single ops)
+  P2  keys are content-addressed and codec-agnostic: key == blake2b(logical)
+      no matter which composition stored the chunk
+  P3  list_chunk_keys enumerates exactly the live keys (no dupes across
+      shards/replicas)
+  P4  delete_chunks removes everywhere; CAS dedup still holds afterwards
+
+The hypothesis run fuzzes blob sets over in-memory compositions; the
+deterministic run covers every composition (including disk backends) with a
+fixed corpus, so tier-1 exercises the matrix even without hypothesis.
+"""
+import pytest
+from _hypothesis_compat import HAVE_HYPOTHESIS, HealthCheck, given, settings, st
+
+from repro.core import (CompressedStore, MemoryStore, ReplicatedStore,
+                        ShardedStore, TieredStore)
+from repro.core.chunkstore import DirectoryStore, SQLiteStore, chunk_key
+
+
+def _mem_composition(kind):
+    if kind == "sharded":
+        return ShardedStore([MemoryStore() for _ in range(3)])
+    if kind == "replicated":
+        return ReplicatedStore([MemoryStore() for _ in range(2)])
+    if kind == "tiered":
+        return TieredStore(MemoryStore(), hot_bytes=1 << 12)
+    if kind == "compressed":
+        return CompressedStore(MemoryStore(), "zlib")
+    if kind == "sharded_rep":
+        return ShardedStore([
+            ReplicatedStore([MemoryStore(), MemoryStore()]),
+            ReplicatedStore([MemoryStore(), MemoryStore()])])
+    if kind == "compressed_sharded_tier":
+        return CompressedStore(ShardedStore([
+            TieredStore(MemoryStore(), hot_bytes=1 << 12),
+            TieredStore(MemoryStore(), hot_bytes=1 << 12)]), "zlib")
+    raise AssertionError(kind)
+
+
+MEM_KINDS = ["sharded", "replicated", "tiered", "compressed", "sharded_rep",
+             "compressed_sharded_tier"]
+
+
+def _disk_composition(kind, tmp_path):
+    if kind == "sharded_dirs":
+        return ShardedStore([DirectoryStore(str(tmp_path / f"s{i}"))
+                             for i in range(3)])
+    if kind == "rep_sqlite":
+        return ReplicatedStore([SQLiteStore(str(tmp_path / f"r{i}.db"))
+                                for i in range(2)])
+    if kind == "tier_sqlite":
+        return TieredStore(SQLiteStore(str(tmp_path / "cold.db")),
+                           hot_bytes=1 << 12)
+    if kind == "codec_shard_mixed":
+        return CompressedStore(ShardedStore([
+            DirectoryStore(str(tmp_path / "m0")),
+            SQLiteStore(str(tmp_path / "m1.db"))]), "zlib")
+    raise AssertionError(kind)
+
+
+DISK_KINDS = ["sharded_dirs", "rep_sqlite", "tier_sqlite",
+              "codec_shard_mixed"]
+
+
+def _check_invariants(store, blobs):
+    pairs = {chunk_key(d): d for d in blobs}
+    items = list(pairs.items())
+    written = store.put_chunks(items)
+    assert 0 <= written <= len(items)
+    # P1/P2: round-trip + content addressing, batched and single
+    assert store.get_chunks(list(pairs)) == pairs
+    for k, d in items[:3]:
+        assert store.get_chunk(k) == d
+        assert chunk_key(store.get_chunk(k)) == k
+        assert store.has_chunk(k)
+    # P3: enumeration is exact and dupe-free
+    listed = store.list_chunk_keys()
+    assert sorted(listed) == sorted(pairs)
+    # P4: CAS dedup — rewriting everything adds nothing
+    assert store.put_chunks(items) == 0
+    assert sorted(store.list_chunk_keys()) == sorted(pairs)
+    # delete a prefix; the rest survives
+    doomed = list(pairs)[:len(pairs) // 2]
+    store.delete_chunks(doomed)
+    for k in doomed:
+        assert not store.has_chunk(k)
+    keep = {k: d for k, d in pairs.items() if k not in doomed}
+    assert store.get_chunks(list(keep)) == keep
+    assert sorted(store.list_chunk_keys()) == sorted(keep)
+
+
+CORPUS = [b"", b"x", b"hello world" * 40, b"\x00" * 3000,
+          bytes(range(256)) * 8, b"KZC1 looks like a frame" * 3,
+          b"A" * 5000]
+
+
+@pytest.mark.parametrize("kind", MEM_KINDS)
+def test_composition_invariants_fixed_corpus(kind):
+    _check_invariants(_mem_composition(kind), CORPUS)
+
+
+@pytest.mark.parametrize("kind", DISK_KINDS)
+def test_disk_composition_invariants_fixed_corpus(kind, tmp_path):
+    _check_invariants(_disk_composition(kind, tmp_path), CORPUS)
+
+
+@pytest.mark.skipif(not HAVE_HYPOTHESIS, reason="hypothesis not installed")
+@settings(max_examples=25, deadline=None,
+          suppress_health_check=list(HealthCheck) if HAVE_HYPOTHESIS else [])
+@given(kind=st.sampled_from(MEM_KINDS),
+       blobs=st.lists(st.binary(min_size=0, max_size=2048), min_size=1,
+                      max_size=12))
+def test_composition_invariants_fuzzed(kind, blobs):
+    _check_invariants(_mem_composition(kind), blobs)
