@@ -80,11 +80,17 @@ class DeviceStore(ChunkStore):
     def put_meta(self, name, doc):
         self.inner.put_meta(name, doc)
 
+    def put_meta_batch(self, docs):
+        self.inner.put_meta_batch(docs)
+
     def get_meta(self, name):
         return self.inner.get_meta(name)
 
     def list_meta(self, prefix):
         return self.inner.list_meta(prefix)
+
+    def delete_meta(self, name):
+        self.inner.delete_meta(name)
 
     def chunk_bytes_total(self):
         return self.inner.chunk_bytes_total()

@@ -93,6 +93,16 @@ def bench_fabric(quick: bool):
     return rows
 
 
+def bench_txn(quick: bool):
+    """Transactional commit engine: group-commit throughput, publish
+    latency hidden behind think time, recovery vs journal length.  Writes
+    BENCH_txn.json."""
+    from benchmarks import bench_txn as b
+    rows = b.run(n_cells=12) if quick else b.run()
+    _write_bench_json("BENCH_txn.json", rows)
+    return rows
+
+
 def bench_tracking(quick: bool):
     """Table 6 / Fig 17 (tracking overhead)."""
     from benchmarks import bench_tracking as b
@@ -154,6 +164,7 @@ ALL = {
     "ckpt_io": bench_ckpt_io,
     "delta": bench_delta,
     "fabric": bench_fabric,
+    "txn": bench_txn,
     "tracking": bench_tracking,
     "covar_sweep": bench_covar_sweep,
     "scalability": bench_scalability,
@@ -173,6 +184,10 @@ def main() -> None:
                     help="fast CI gate: storage-fabric scatter-gather "
                          "speedup + replica-loss restore assertions + "
                          "BENCH_fabric.json")
+    ap.add_argument("--smoke-txn", action="store_true",
+                    help="fast CI gate: transactional commit engine — "
+                         "group-commit amortization + crash-recovery "
+                         "assertions + BENCH_txn.json")
     args = ap.parse_args()
     if args.smoke:
         from benchmarks import bench_delta as b
@@ -187,6 +202,13 @@ def main() -> None:
         _print_rows(rows)
         _write_bench_json("BENCH_fabric.json", rows)
         print("# fabric smoke OK", flush=True)
+        return
+    if args.smoke_txn:
+        from benchmarks import bench_txn as b
+        rows = b.smoke()        # raises AssertionError on regression
+        _print_rows(rows)
+        _write_bench_json("BENCH_txn.json", rows)
+        print("# txn smoke OK", flush=True)
         return
     names = [args.only] if args.only else list(ALL)
     for name in names:

@@ -13,8 +13,10 @@ Checkpoint Graph at co-variable granularity) as a composable library:
 """
 from repro.core.chunkstore import (ChunkCache, ChunkStore, CompressedStore,
                                    DirectoryStore, FaultInjectedStore,
+                                   FaultInjectingStore, InjectedCrash,
                                    MemoryStore, SQLiteStore,
                                    available_codecs, open_store)
+from repro.core.txn import FsckReport, TxnEngine, TxnError, fsck, recover
 from repro.core.fabric import (HashRing, ReplicatedStore, ScrubReport,
                                ShardedStore, TieredStore, parse_topology,
                                rebalance, scrub)
@@ -41,4 +43,6 @@ __all__ = [
     "RunStats", "DetReplaySession", "DumpSession", "PageIncremental",
     "HashRing", "ReplicatedStore", "ScrubReport", "ShardedStore",
     "TieredStore", "parse_topology", "rebalance", "scrub",
+    "FaultInjectingStore", "InjectedCrash", "FsckReport", "TxnEngine",
+    "TxnError", "fsck", "recover",
 ]

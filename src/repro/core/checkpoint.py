@@ -221,12 +221,23 @@ class CheckpointWriter:
         # dirty-range serialization; False = pre-delta full-blob writer
         # (benchmark baseline)
         self.delta_ranges = True
+        # WAL hook (txn.TxnEngine.journal_chunks): called with a batch's
+        # keys immediately before the backend put, so a crashed commit's
+        # chunks are journaled and recovery can roll them back exactly
+        self.journal: Optional[Callable[[List[str]], None]] = None
         self._q: "queue.Queue" = queue.Queue()
         self._batch: List[Tuple[str, bytes]] = []     # sync-mode delta batch
         self._batch_keys: set = set()
         self._worker: Optional[threading.Thread] = None
         self._errors: List[Exception] = []
         self.pending_keys: set = set()
+        # epoch fence: chunks enqueued vs chunks that have left the writer
+        # (landed or failed) — the txn engine's durability proof for async
+        # writes.  wait_epoch(epoch()) == "everything enqueued so far is
+        # out of the pipeline".
+        self._cv = threading.Condition()
+        self._enqueued = 0
+        self._completed = 0
         if async_write:
             self._worker = threading.Thread(target=self._drain, daemon=True)
             self._worker.start()
@@ -248,27 +259,41 @@ class CheckpointWriter:
                     break
                 batch.append(nxt)
             try:
-                try:
-                    self.store.put_chunks(batch)
-                except Exception:  # noqa: BLE001
-                    # batch op failed somewhere: degrade to per-chunk puts
-                    # so one bad chunk doesn't drop its whole batch
-                    for ck, data in batch:
-                        try:
-                            self.store.put_chunk(ck, data)
-                        except Exception as e:  # noqa: BLE001
-                            self._errors.append(e)
+                journaled = True
+                if self.journal is not None:
+                    try:        # WAL the keys BEFORE the backend put
+                        self.journal([ck for ck, _ in batch])
+                    except Exception as e:  # noqa: BLE001
+                        journaled = False   # unjournaled chunks must not
+                        self._errors.append(e)  # land: rollback couldn't
+                                                # find them
+                if journaled:
+                    try:
+                        self.store.put_chunks(batch)
+                    except Exception:  # noqa: BLE001
+                        # batch op failed somewhere: degrade to per-chunk
+                        # puts so one bad chunk doesn't drop its whole batch
+                        for ck, data in batch:
+                            try:
+                                self.store.put_chunk(ck, data)
+                            except Exception as e:  # noqa: BLE001
+                                self._errors.append(e)
             finally:
                 for ck, _ in batch:
                     self.pending_keys.discard(ck)
                 for _ in batch:
                     self._q.task_done()
+                with self._cv:
+                    self._completed += len(batch)
+                    self._cv.notify_all()
             if saw_sentinel:
                 return
 
     def _put(self, ck: str, data: bytes) -> None:
         if self.cache is not None:
             self.cache.put(ck, bytes(data))
+        with self._cv:
+            self._enqueued += 1
         if self.async_write:
             self.pending_keys.add(ck)
             self._q.put((ck, bytes(data)))
@@ -283,7 +308,38 @@ class CheckpointWriter:
             return
         batch, self._batch = self._batch, []
         self._batch_keys = set()
-        self.store.put_chunks(batch)
+        try:
+            if self.journal is not None:
+                # WAL before the puts; a journal failure aborts the batch
+                # (the exception propagates to run()) so no chunk ever
+                # lands unjournaled
+                self.journal([ck for ck, _ in batch])
+            self.store.put_chunks(batch)
+        finally:
+            # the batch leaves the pipeline on ANY outcome — journal
+            # failures included — or a later epoch fence would wait forever
+            with self._cv:
+                self._completed += len(batch)
+                self._cv.notify_all()
+
+    def epoch(self) -> int:
+        """Fence token: number of chunks enqueued so far."""
+        with self._cv:
+            return self._enqueued
+
+    def wait_epoch(self, token: Optional[int] = None,
+                   timeout: Optional[float] = None) -> None:
+        """Block until every chunk enqueued at or before ``token`` (default:
+        all enqueued so far) has left the writer — landed or failed — then
+        surface the first async write error, if any.  The txn engine's
+        durability fence: once this returns cleanly, publishing metadata
+        that references those chunks is safe."""
+        with self._cv:
+            tgt = self._enqueued if token is None else token
+            self._cv.wait_for(lambda: self._completed >= tgt, timeout)
+        if self._errors:
+            errs, self._errors = self._errors, []
+            raise errs[0]
 
     def _has(self, ck: str) -> bool:
         """CAS membership including chunks deferred in this delta."""

@@ -332,11 +332,37 @@ class ChunkStore:
     def put_meta(self, name: str, doc: dict) -> None:
         raise NotImplementedError
 
+    def put_meta_batch(self, docs: "Dict[str, dict]") -> None:
+        """Publish several metadata documents as one unit, as atomically as
+        the backend allows (SQLite: one transaction; directory: staged tmp
+        files then a tight rename loop; memory: a single dict update).
+        Iteration order is the publish order — the transaction engine puts
+        HEAD last so even a torn non-atomic publish can never leave HEAD
+        naming a commit whose doc is absent.  The base default degrades to
+        ordered per-doc puts, which fault-injection wrappers rely on to
+        land a crash *between* documents."""
+        for name, doc in docs.items():
+            self.put_meta(name, doc)
+
     def get_meta(self, name: str) -> Optional[dict]:
         raise NotImplementedError
 
     def list_meta(self, prefix: str) -> List[str]:
         raise NotImplementedError
+
+    def delete_meta(self, name: str) -> None:
+        """Remove a metadata document (journal seals, tombstone purges);
+        idempotent — deleting an absent doc is a no-op."""
+        raise NotImplementedError
+
+    def delete_meta_batch(self, names: Sequence[str]) -> None:
+        """Remove several metadata documents, backend-batched where
+        possible (one SQLite transaction) — the commit engine seals a
+        transaction's journal docs in one round-trip.  Iteration order is
+        the delete order; the default degrades to per-doc deletes, which
+        fault-injection wrappers rely on to land a crash mid-seal."""
+        for name in names:
+            self.delete_meta(name)
 
     def delete_chunk(self, key: str) -> None:
         raise NotImplementedError
@@ -418,11 +444,20 @@ class MemoryStore(ChunkStore):
     def put_meta(self, name, doc):
         self.meta[name] = json.loads(json.dumps(doc))
 
+    def put_meta_batch(self, docs):
+        # serialize everything first, install in one update: a failure while
+        # preparing leaves the published metadata untouched
+        prepared = {n: json.loads(json.dumps(d)) for n, d in docs.items()}
+        self.meta.update(prepared)
+
     def get_meta(self, name):
         return self.meta.get(name)
 
     def list_meta(self, prefix):
         return sorted(k for k in self.meta if k.startswith(prefix))
+
+    def delete_meta(self, name):
+        self.meta.pop(name, None)
 
     def chunk_bytes_total(self):
         return sum(len(v) for v in self.chunks.values())
@@ -530,12 +565,32 @@ class DirectoryStore(ChunkStore):
             json.dump(doc, f)
         os.replace(tmp, path)
 
+    def put_meta_batch(self, docs):
+        # stage every doc as a tmp file first, then a tight rename loop:
+        # each rename is individually atomic, and the torn window between
+        # renames is syscall-narrow (the commit journal covers even that)
+        staged = []
+        for name, doc in docs.items():
+            path = self._meta_path(name)
+            tmp = path + f".tmp.{os.getpid()}.{threading.get_ident()}"
+            with open(tmp, "w") as f:
+                json.dump(doc, f)
+            staged.append((tmp, path))
+        for tmp, path in staged:
+            os.replace(tmp, path)
+
     def get_meta(self, name):
         try:
             with open(self._meta_path(name)) as f:
                 return json.load(f)
         except FileNotFoundError:
             return None
+
+    def delete_meta(self, name):
+        try:
+            os.remove(self._meta_path(name))
+        except FileNotFoundError:
+            pass
 
     def list_meta(self, prefix):
         mdir = os.path.join(self.root, "meta")
@@ -666,10 +721,28 @@ class SQLiteStore(ChunkStore):
                     (name, json.dumps(doc)))
         con.commit()
 
+    def put_meta_batch(self, docs):
+        # one transaction: the whole publish (commit docs + HEAD) is atomic
+        con = self._con()
+        con.executemany("INSERT OR REPLACE INTO meta VALUES (?, ?)",
+                        [(n, json.dumps(d)) for n, d in docs.items()])
+        con.commit()
+
     def get_meta(self, name):
         row = self._con().execute(
             "SELECT doc FROM meta WHERE name=?", (name,)).fetchone()
         return json.loads(row[0]) if row else None
+
+    def delete_meta(self, name):
+        con = self._con()
+        con.execute("DELETE FROM meta WHERE name=?", (name,))
+        con.commit()
+
+    def delete_meta_batch(self, names):
+        con = self._con()
+        con.executemany("DELETE FROM meta WHERE name=?",
+                        [(n,) for n in names])
+        con.commit()
 
     def list_meta(self, prefix):
         rows = self._con().execute(
@@ -742,11 +815,20 @@ class CompressedStore(ChunkStore):
     def put_meta(self, name, doc):
         self.inner.put_meta(name, doc)
 
+    def put_meta_batch(self, docs):
+        self.inner.put_meta_batch(docs)
+
     def get_meta(self, name):
         return self.inner.get_meta(name)
 
     def list_meta(self, prefix):
         return self.inner.list_meta(prefix)
+
+    def delete_meta(self, name):
+        self.inner.delete_meta(name)
+
+    def delete_meta_batch(self, names):
+        self.inner.delete_meta_batch(names)
 
     def chunk_bytes_total(self):
         return self.inner.chunk_bytes_total()
@@ -825,6 +907,115 @@ class FaultInjectedStore(ChunkStore):
 
     def put_meta(self, name, doc):
         self.inner.put_meta(name, doc)
+
+    def get_meta(self, name):
+        return self.inner.get_meta(name)
+
+    def list_meta(self, prefix):
+        return self.inner.list_meta(prefix)
+
+    def delete_meta(self, name):
+        self.inner.delete_meta(name)
+
+    def chunk_bytes_total(self):
+        return self.inner.chunk_bytes_total()
+
+    def n_chunks(self):
+        return self.inner.n_chunks()
+
+
+class InjectedCrash(RuntimeError):
+    """Simulated process kill: raised *instead of* performing a write, so the
+    wrapped store keeps exactly the state that had landed before the kill."""
+
+
+class FaultInjectingStore(ChunkStore):
+    """Crash-injection wrapper: kill the process after N write operations.
+
+    Unlike :class:`FaultInjectedStore` (per-key fault predicates and delays),
+    this wrapper models a *process death* at a precise point in the commit
+    pipeline: every write-side operation (chunk put/delete, meta put/delete)
+    advances a counter, and once ``crash_after`` operations have landed the
+    next write raises :class:`InjectedCrash` without touching the backend.
+    Crash-recovery tests sweep ``crash_after`` over every index, proving the
+    transaction engine recovers from a kill between *any* two device writes.
+
+    Batched operations decompose to per-op calls so the kill can land inside
+    a batch — modeling a non-atomic backend / a kill mid-scatter — and so op
+    indices are deterministic across identical runs.  Reads pass through
+    uncounted (a crashed process performs no further reads that matter) and
+    engine hints force the serial path, keeping the op order reproducible.
+    """
+
+    supports_parallel_get = False
+    min_slab = 1
+    native_scatter = False
+
+    def __init__(self, inner: ChunkStore, *,
+                 crash_after: Optional[int] = None):
+        self.inner = inner
+        self.crash_after = crash_after
+        self.ops = 0                  # write ops that actually landed
+        self.op_log: List[str] = []   # labels of landed ops, for tests that
+                                      # target a specific pipeline stage
+
+    def _tick(self, label: str) -> None:
+        if self.crash_after is not None and self.ops >= self.crash_after:
+            raise InjectedCrash(f"injected kill at write op {self.ops} "
+                                f"(next: {label})")
+        self.ops += 1
+        self.op_log.append(label)
+
+    # ---- writes: counted, crashing before the op reaches the backend ----
+    def put_chunk(self, key, data):
+        self._tick(f"put_chunk:{key}")
+        return self.inner.put_chunk(key, data)
+
+    def put_chunks(self, pairs):
+        return sum(bool(self.put_chunk(k, d)) for k, d in pairs)
+
+    def delete_chunk(self, key):
+        self._tick(f"delete_chunk:{key}")
+        self.inner.delete_chunk(key)
+
+    def delete_chunks(self, keys):
+        removed = 0
+        for k in keys:
+            had = self.inner.has_chunk(k)
+            self.delete_chunk(k)
+            removed += bool(had)
+        return removed
+
+    def put_meta(self, name, doc):
+        self._tick(f"put_meta:{name}")
+        self.inner.put_meta(name, doc)
+
+    # put_meta_batch deliberately NOT overridden: the base default loops
+    # per-doc through put_meta above, so a kill lands *between* documents —
+    # the torn-publish case the journal must recover from.
+
+    def delete_meta(self, name):
+        self._tick(f"delete_meta:{name}")
+        self.inner.delete_meta(name)
+
+    # ---- reads: uncounted pass-through ----
+    def get_chunk(self, key):
+        return self.inner.get_chunk(key)
+
+    def get_chunk_stored(self, key):
+        return self.inner.get_chunk_stored(key)
+
+    def get_chunks(self, keys, *, missing_ok=False):
+        return self.inner.get_chunks(keys, missing_ok=missing_ok)
+
+    def has_chunk(self, key):
+        return self.inner.has_chunk(key)
+
+    def list_chunk_keys(self):
+        return self.inner.list_chunk_keys()
+
+    def chunk_sizes(self, keys):
+        return self.inner.chunk_sizes(keys)
 
     def get_meta(self, name):
         return self.inner.get_meta(name)

@@ -245,6 +245,13 @@ class ShardedStore(ChunkStore):
         parallel.scatter_parallel(lambda s: s.put_meta(name, doc),
                                   self.shards)
 
+    def put_meta_batch(self, docs):
+        # one scatter, each shard applying its own atomic batch — the
+        # commit engine's publish costs one round per shard, not one per
+        # (doc x shard)
+        parallel.scatter_parallel(lambda s: s.put_meta_batch(docs),
+                                  self.shards)
+
     def get_meta(self, name):
         for s in self.shards:
             doc = s.get_meta(name)
@@ -257,6 +264,15 @@ class ShardedStore(ChunkStore):
         for s in self.shards:
             out.update(s.list_meta(prefix))
         return sorted(out)
+
+    def delete_meta(self, name):
+        # mirrored docs (journal seals, tombstone purges) die everywhere
+        parallel.scatter_parallel(lambda s: s.delete_meta(name), self.shards)
+
+    def delete_meta_batch(self, names):
+        names = list(names)
+        parallel.scatter_parallel(lambda s: s.delete_meta_batch(names),
+                                  self.shards)
 
     # ---- stats ----
     def chunk_bytes_total(self):
@@ -410,6 +426,10 @@ class ReplicatedStore(ChunkStore):
         parallel.scatter_parallel(lambda r: r.put_meta(name, doc),
                                   self.replicas)
 
+    def put_meta_batch(self, docs):
+        parallel.scatter_parallel(lambda r: r.put_meta_batch(docs),
+                                  self.replicas)
+
     def get_meta(self, name):
         for r in self.replicas:
             doc = r.get_meta(name)
@@ -422,6 +442,15 @@ class ReplicatedStore(ChunkStore):
         for r in self.replicas:
             out.update(r.list_meta(prefix))
         return sorted(out)
+
+    def delete_meta(self, name):
+        parallel.scatter_parallel(lambda r: r.delete_meta(name),
+                                  self.replicas)
+
+    def delete_meta_batch(self, names):
+        names = list(names)
+        parallel.scatter_parallel(lambda r: r.delete_meta_batch(names),
+                                  self.replicas)
 
     # ---- stats: logical (max across replicas), not physical sum ----
     def chunk_bytes_total(self):
@@ -513,11 +542,20 @@ class TieredStore(ChunkStore):
     def put_meta(self, name, doc):
         self.cold.put_meta(name, doc)
 
+    def put_meta_batch(self, docs):
+        self.cold.put_meta_batch(docs)
+
     def get_meta(self, name):
         return self.cold.get_meta(name)
 
     def list_meta(self, prefix):
         return self.cold.list_meta(prefix)
+
+    def delete_meta(self, name):
+        self.cold.delete_meta(name)
+
+    def delete_meta_batch(self, names):
+        self.cold.delete_meta_batch(names)
 
     def chunk_bytes_total(self):
         return self.cold.chunk_bytes_total()

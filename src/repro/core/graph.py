@@ -32,6 +32,18 @@ def parse_key(s: str) -> CovKey:
     return tuple(s.split(KEY_SEP))
 
 
+def manifest_chunk_keys(manifests: Dict[str, dict]):
+    """Chunk keys referenced by a commit doc's manifest map — THE single
+    definition of a chunk reference, shared by gc marking
+    (``live_chunk_keys``), recovery's rollback filter, and fsck, so the
+    three can never disagree about what is referenced."""
+    for man in manifests.values():
+        if man.get("unserializable"):
+            continue
+        for c in man.get("base", {}).get("chunks", []):
+            yield c["key"]
+
+
 @dataclass
 class CommitNode:
     commit_id: str
@@ -81,12 +93,23 @@ class CheckoutPlan:
 
 
 class CheckpointGraph:
-    def __init__(self, store: ChunkStore):
+    def __init__(self, store: ChunkStore, *, engine=None,
+                 recover: bool = True):
         self.store = store
+        # commit publication routes through the transactional engine when
+        # one is attached (txn.TxnEngine): journaled, group-committed,
+        # fenced against async chunk writes.  Engine-less graphs still
+        # publish through the atomic put_meta_batch (doc before HEAD).
+        self.engine = engine
         self.nodes: Dict[str, CommitNode] = {}
         self.children: Dict[str, List[str]] = {}
         self.head: Optional[str] = None
         self._seq = 0
+        self._meta_bytes = 0    # cached sum of serialized node docs —
+                                # storage_stats() must not re-dump the graph
+        if recover:
+            from repro.core import txn as txn_mod
+            txn_mod.recover(store)     # replay/roll back unsealed txns
         self._load()
 
     # ------------------------------------------------------------------
@@ -100,6 +123,7 @@ class CheckpointGraph:
                             # a commit's own "deleted" field is a list
             node = CommitNode.from_doc(doc)
             self.nodes[node.commit_id] = node
+            self._meta_bytes += len(json.dumps(node.to_doc()))
         for node in self.nodes.values():
             if node.parent is not None:
                 self.children.setdefault(node.parent, []).append(node.commit_id)
@@ -109,8 +133,15 @@ class CheckpointGraph:
             self._seq = head_doc["seq"]
 
     def _persist(self, node: CommitNode) -> None:
-        self.store.put_meta(f"commit/{node.commit_id}", node.to_doc())
-        self.store.put_meta("HEAD", {"head": self.head, "seq": self._seq})
+        doc = node.to_doc()
+        self._meta_bytes += len(json.dumps(doc))
+        docs = {f"commit/{node.commit_id}": doc,
+                "HEAD": {"head": self.head, "seq": self._seq}}
+        if self.engine is not None:
+            self.engine.commit(docs)
+        else:
+            self.store.put_meta_batch(docs)    # atomic where the backend
+                                               # allows; always doc-then-HEAD
 
     # ------------------------------------------------------------------
     # commits
@@ -157,7 +188,25 @@ class CheckpointGraph:
     def set_head(self, commit_id: str) -> None:
         assert commit_id in self.nodes, commit_id
         self.head = commit_id
-        self.store.put_meta("HEAD", {"head": self.head, "seq": self._seq})
+        if self.engine is not None:
+            # publish any queued commits first: durable HEAD must never
+            # name a commit whose doc is still in an open group
+            self.engine.flush()
+        self.store.put_meta_batch(
+            {"HEAD": {"head": self.head, "seq": self._seq}})
+
+    def forget(self, commit_id: str) -> None:
+        """Drop a commit from the in-memory graph (branch deletion),
+        keeping children and the cached meta-bytes accounting in step.
+        The caller owns the on-store tombstone."""
+        node = self.nodes.pop(commit_id, None)
+        if node is None:
+            return
+        self._meta_bytes -= len(json.dumps(node.to_doc()))
+        self.children.pop(commit_id, None)
+        if node.parent in self.children:
+            self.children[node.parent] = [
+                c for c in self.children[node.parent] if c != commit_id]
 
     # ------------------------------------------------------------------
     # queries
@@ -204,11 +253,7 @@ class CheckpointGraph:
         on what is garbage)."""
         live = set()
         for node in self.nodes.values():
-            for man in node.manifests.values():
-                if man.get("unserializable"):
-                    continue
-                for c in man.get("base", {}).get("chunks", []):
-                    live.add(c["key"])
+            live.update(manifest_chunk_keys(node.manifests))
         return live
 
     def log(self, limit: int = 0) -> List[dict]:
@@ -232,4 +277,7 @@ class CheckpointGraph:
         return out[::-1]
 
     def total_meta_bytes(self) -> int:
-        return sum(len(json.dumps(n.to_doc())) for n in self.nodes.values())
+        """Serialized size of all commit docs — maintained incrementally
+        (commit/load/forget), so ``storage_stats()`` is O(1) instead of
+        re-dumping every node's JSON on each call."""
+        return self._meta_bytes

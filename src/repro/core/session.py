@@ -29,6 +29,8 @@ from repro.core.covariable import (CovKey, RecordBuilder, StateDelta,
 from repro.core.graph import CheckpointGraph, key_str
 from repro.core.namespace import Namespace, TrackedNamespace
 from repro.core.restore import DataRestorer
+from repro.core.txn import TxnEngine
+from repro.core.txn import purge_tombstones as txn_purge_tombstones
 
 
 @dataclass
@@ -45,6 +47,18 @@ class RunStats:
     write: WriteStats = field(default_factory=WriteStats)
 
 
+@dataclass
+class _RunPlan:
+    """Output of the *plan* stage of a run: the executed cell's detected
+    delta plus everything the *execute* (commit) stage needs."""
+    name: str
+    args: dict
+    delta: StateDelta
+    deps: Dict[CovKey, str]
+    stats: RunStats
+    t_all: float
+
+
 class KishuSession:
     def __init__(self, store: ChunkStore, *,
                  chunk_bytes: int = hashing.DEFAULT_CHUNK_BYTES,
@@ -53,11 +67,12 @@ class KishuSession:
                  check_all: bool = False,
                  hasher=None,
                  io_threads: Optional[int] = None,
-                 cache_bytes: Optional[int] = None):
+                 cache_bytes: Optional[int] = None,
+                 group_commit_n: int = 1,
+                 async_publish: bool = False):
         self.store = store
         self.ns = Namespace()
         self.tracked = TrackedNamespace(self.ns)
-        self.graph = CheckpointGraph(store)
         self.builder = RecordBuilder(chunk_bytes, hasher=hasher)
         # one chunk cache shared by writer and loader: checking out a
         # just-committed state is served from memory, not the backend
@@ -67,6 +82,32 @@ class KishuSession:
                                        async_write=async_write,
                                        write_deadline_s=write_deadline_s,
                                        cache=self.chunk_cache)
+        # transactional commit engine (DESIGN.md §13): every commit is a
+        # journaled transaction — WAL, chunk puts, epoch fence, atomic
+        # multi-meta publish, seal.  group_commit_n > 1 batches consecutive
+        # cells' metadata into one publish (crash loses at most the last
+        # n-1 cells, never tears state); async_publish hides the publish
+        # behind the next cell's think time.
+        # a write deadline bounds the publish fence too: the straggler
+        # feature's contract is that a slow host delays durability, not
+        # the cell loop — a commit published past the deadline references
+        # still-pending chunks, and checkout of those falls back to
+        # recomputation exactly as before the engine existed
+        fence_timeout = write_deadline_s or None
+        self.engine = TxnEngine(store, group_n=group_commit_n,
+                                async_publish=async_publish,
+                                fence=(lambda token: self.writer.wait_epoch(
+                                    token, timeout=fence_timeout)),
+                                fence_token=self.writer.epoch,
+                                # sync writer journals a commit's chunks
+                                # before commit() returns, so groups can
+                                # detach at kick time; the async drain
+                                # journals with a lag the fence bounds
+                                early_snapshot=not async_write)
+        self.writer.journal = self.engine.journal_chunks
+        # graph open runs txn.recover first: a crashed predecessor's
+        # unsealed transactions are replayed or rolled back before loading
+        self.graph = CheckpointGraph(store, engine=self.engine)
         self.registry: Dict[str, Callable] = {}
         self.records: Dict[str, Any] = {}
         self.covs: Dict[CovKey, List[str]] = {}
@@ -107,7 +148,20 @@ class KishuSession:
     # cell execution + incremental checkpoint
     # ------------------------------------------------------------------
     def run(self, command: str, _message: str = "", **args) -> str:
-        name = command
+        """Cell execution + incremental checkpoint, split into a *plan*
+        stage (execute the cell, detect the state delta) and an *execute*
+        stage (write chunks, commit through the transaction engine).  With
+        ``async_publish`` the previous commit's metadata publish overlaps
+        this cell's plan stage — the engine fences chunk durability on its
+        own thread, so the cell loop never waits on the store's metadata
+        round-trips."""
+        plan = self._plan_run(command, args)
+        return self._execute_commit(plan, _message)
+
+    def _plan_run(self, name: str, args: dict) -> "_RunPlan":
+        """Stage 1: run the cell against the tracked namespace and detect
+        the co-variable-granularity delta (Lemma-1-pruned).  Touches no
+        storage — everything durable happens in :meth:`_execute_commit`."""
         fn = self.registry[name]
         stats = RunStats()
         t_all = time.perf_counter()
@@ -135,7 +189,15 @@ class KishuSession:
             ver = prev_index.get(key_str(key))
             if ver is not None:
                 deps[key] = ver
+        return _RunPlan(name=name, args=args, delta=delta, deps=deps,
+                        stats=stats, t_all=t_all)
 
+    def _execute_commit(self, plan: "_RunPlan", message: str = "") -> str:
+        """Stage 2: serialize the delta's dirty ranges into journaled chunk
+        puts and append the commit to the Checkpoint Graph through the
+        transaction engine (WAL ⟶ chunk puts ⟶ fence ⟶ atomic publish ⟶
+        seal)."""
+        delta, stats = plan.delta, plan.stats
         t0 = time.perf_counter()
         manifests, wstats = self.writer.write_delta(
             delta, self.ns, self._prev_manifest)
@@ -143,12 +205,12 @@ class KishuSession:
         stats.write = wstats
 
         node = self.graph.commit(
-            command={"name": name, "args": args},
+            command={"name": plan.name, "args": plan.args},
             manifests=manifests,
             deleted_keys=delta.deleted,
-            accessed=deps,
+            accessed=plan.deps,
             updated_keys=list(delta.updated),
-            message=_message,
+            message=message,
             stats={"bytes_written": wstats.bytes_written,
                    "bytes_serialized": wstats.bytes_serialized,
                    "bytes_logical": wstats.bytes_logical,
@@ -160,7 +222,7 @@ class KishuSession:
         stats.covs_deleted = len(delta.deleted)
         stats.covs_checked = delta.checked
         stats.covs_skipped = delta.skipped
-        stats.total_s = time.perf_counter() - t_all
+        stats.total_s = time.perf_counter() - plan.t_all
         self.last_run = stats
         return node.commit_id
 
@@ -175,6 +237,7 @@ class KishuSession:
     # ------------------------------------------------------------------
     def checkout(self, commit_id: str) -> CheckoutStats:
         self.writer.flush()
+        self.engine.flush()     # pending publishes land before time travel
         self.restorer.clear_memo()
         self.records, stats = self.loader.checkout(self.tracked, self.records,
                                                    commit_id)
@@ -202,6 +265,8 @@ class KishuSession:
         Returns deleted commit ids. Run ``gc()`` afterwards to reclaim
         chunks."""
         assert tip != self.graph.head, "cannot delete the current branch"
+        self.engine.flush()     # a queued publish must not resurrect a
+                                # commit tombstoned below
         doomed = []
         node = self.graph.nodes[tip]
         while node.parent is not None:
@@ -213,34 +278,46 @@ class KishuSession:
         head_path = set(self.graph.path_from_root(self.graph.head))
         doomed = [c for c in doomed if c not in head_path]
         for cid in doomed:
-            parent = self.graph.nodes[cid].parent
-            if parent in self.graph.children:
-                self.graph.children[parent] = [
-                    c for c in self.graph.children[parent] if c != cid]
-            del self.graph.nodes[cid]
+            self.graph.forget(cid)
             self.store.put_meta(f"commit/{cid}", {"deleted": True})
         return doomed
 
     def gc(self) -> dict:
         """Content-addressed garbage collection: drop chunks referenced by
-        no live manifest (after branch deletion / history truncation).
-        Enumerates through ``list_chunk_keys()`` and deletes through the
-        batched ``delete_chunks()`` — so every backend (single-file SQLite,
-        sharded/replicated fabrics) reclaims space, and a fabric sweeps all
-        its shards and replicas, strays included."""
+        no live manifest (after branch deletion / history truncation), and
+        purge ``delete_branch`` tombstone metadata docs — without the purge
+        every subsequent ``_load`` re-reads dead ``{"deleted": True}``
+        markers forever.  Enumerates through ``list_chunk_keys()`` and
+        deletes through the batched ``delete_chunks()`` — so every backend
+        (single-file SQLite, sharded/replicated fabrics) reclaims space,
+        and a fabric sweeps all its shards and replicas, strays included."""
+        self.writer.flush()
+        self.engine.flush()     # unpublished manifests must be visible to
+                                # fsck/other readers before their chunks
+                                # are judged live
         live = self.graph.live_chunk_keys()
         dead = [k for k in self.store.list_chunk_keys() if k not in live]
         freed = sum(self.store.chunk_sizes(dead).values())
         self.store.delete_chunks(dead)
+        purged = txn_purge_tombstones(self.store, self.graph.nodes)
         return {"chunks_dropped": len(dead), "bytes_freed": freed,
-                "chunks_live": len(live)}
+                "chunks_live": len(live), "tombstones_purged": purged}
 
     def storage_stats(self) -> dict:
         return {"chunk_bytes": self.store.chunk_bytes_total(),
                 "n_chunks": self.store.n_chunks(),
                 "graph_meta_bytes": self.graph.total_meta_bytes(),
-                "n_commits": len(self.graph.nodes)}
+                "n_commits": len(self.graph.nodes),
+                "txn_publishes": self.engine.stats.publishes,
+                "txn_journal_puts": self.engine.stats.journal_puts}
 
     def close(self) -> None:
-        self.writer.flush()
-        self.writer.close()
+        try:
+            self.writer.flush()
+            self.engine.flush()
+        finally:
+            # a flush error (poisoned engine, deferred publish failure)
+            # must still join the worker threads; the unsealed journal is
+            # the next open's recovery problem, not a thread leak
+            self.engine.close()
+            self.writer.close()

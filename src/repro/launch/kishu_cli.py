@@ -6,6 +6,8 @@
     python -m repro.launch.kishu_cli --store ... stats
     python -m repro.launch.kishu_cli --store ... verify [--commit cXXXXX]
     python -m repro.launch.kishu_cli --store ... gc
+    python -m repro.launch.kishu_cli --store ... fsck
+    python -m repro.launch.kishu_cli --store ... recover
     python -m repro.launch.kishu_cli --store fabric://... topology
     python -m repro.launch.kishu_cli --store fabric://... scrub [--repair]
     python -m repro.launch.kishu_cli --store fabric://... rebalance
@@ -22,6 +24,14 @@ command registry is available).  The fleet verbs ``topology`` / ``scrub`` /
 ``rebalance`` operate on the storage fabric itself: print the composition
 tree, find-and-heal replica-missing / misplaced / corrupt chunks, and move
 chunks to their ring homes after a topology edit.
+
+``fsck`` / ``recover`` are the transaction-engine verbs (DESIGN.md §13):
+``fsck`` audits the *raw, un-recovered* store — unsealed commit journals,
+torn HEAD, missing parents/chunks, dangling chunks — and ``recover``
+replays or rolls back unsealed transactions exactly as a session open
+does implicitly.  The other subcommands never touch the journal: a CLI
+process doesn't own the store the way a session does, and recovering
+under a live session would roll back its in-flight transaction.
 """
 from __future__ import annotations
 
@@ -29,7 +39,7 @@ import argparse
 import sys
 from typing import Optional
 
-from repro.core import fabric, parallel
+from repro.core import fabric, parallel, txn
 from repro.core.chunkstore import chunk_key, open_store
 from repro.core.graph import CheckpointGraph, parse_key
 
@@ -164,8 +174,43 @@ def cmd_gc(store, graph: CheckpointGraph, args) -> int:
     dead = [k for k in store.list_chunk_keys() if k not in live]
     if not args.dry_run:
         store.delete_chunks(dead)
-    print(f"gc: {'would drop' if args.dry_run else 'dropped'} {len(dead)} "
-          f"chunks ({len(live)} live)")
+    # delete_branch tombstones are dead weight once the graph has loaded
+    # without them — purge, or every future _load re-reads them forever
+    # (same helper as KishuSession.gc, so the two sweeps cannot disagree)
+    purged = txn.purge_tombstones(store, graph.nodes, dry_run=args.dry_run)
+    verb = "would drop" if args.dry_run else "dropped"
+    print(f"gc: {verb} {len(dead)} chunks ({len(live)} live), "
+          f"{purged} tombstones")
+    return 0
+
+
+def cmd_fsck(store, args) -> int:
+    rep = txn.fsck(store)
+    for line in rep.details[:args.limit]:
+        print(f"  {line}")
+    if len(rep.details) > args.limit:
+        print(f"  ... {len(rep.details) - args.limit} more")
+    print(f"fsck: {'OK' if rep.clean else f'{rep.problems} problems'} "
+          f"({rep.commits} commits, {rep.unsealed_txns} unsealed txns, "
+          f"{rep.torn_head} torn HEAD, {rep.missing_parents} missing "
+          f"parents, {rep.missing_chunks} missing chunks, "
+          f"{rep.dangling_chunks} dangling chunks, {rep.tombstones} "
+          f"tombstones)")
+    if rep.unsealed_txns:
+        print("hint: `recover` replays or rolls back unsealed txns")
+    if rep.dangling_chunks and not rep.unsealed_txns:
+        # expected between delete_branch and gc; gc is the reclaimer
+        print("hint: dangling chunks are unreferenced data — `gc` "
+              "reclaims them")
+    return 0 if rep.clean else 2
+
+
+def cmd_recover(store, args) -> int:
+    out = txn.recover(store)
+    print(f"recover: {out['replayed']} txns replayed "
+          f"({out['commits_published']} commits published), "
+          f"{out['rolled_back']} rolled back, "
+          f"{out['chunks_dropped']} orphan chunks dropped")
     return 0
 
 
@@ -212,6 +257,10 @@ def main(argv: Optional[list] = None) -> int:
     p.add_argument("--deep", action="store_true")
     p = sub.add_parser("gc")
     p.add_argument("--dry-run", action="store_true")
+    p = sub.add_parser("fsck")
+    p.add_argument("--limit", type=int, default=20,
+                   help="max per-problem detail lines to print")
+    sub.add_parser("recover")
     sub.add_parser("topology")
     p = sub.add_parser("scrub")
     p.add_argument("--repair", action="store_true")
@@ -222,6 +271,12 @@ def main(argv: Optional[list] = None) -> int:
     args = ap.parse_args(argv)
 
     store = open_store(args.store)
+    # store-level verbs run BEFORE any graph construction: fsck must see
+    # the raw, un-recovered state, and recover applies it explicitly
+    if args.cmd == "fsck":
+        return cmd_fsck(store, args)
+    if args.cmd == "recover":
+        return cmd_recover(store, args)
     # fleet verbs operate on the store itself — no graph required
     if args.cmd == "topology":
         return cmd_topology(store, args)
@@ -229,7 +284,11 @@ def main(argv: Optional[list] = None) -> int:
         return cmd_scrub(store, args)
     if args.cmd == "rebalance":
         return cmd_rebalance(store, args)
-    graph = CheckpointGraph(store)
+    # CLI graph verbs are read-only on the commit journal: recovery here
+    # could roll back a LIVE session's in-flight transaction (this process
+    # doesn't own the store the way a session does).  Recovery stays
+    # explicit (`recover`) or implicit on session open.
+    graph = CheckpointGraph(store, recover=False)
     if args.cmd == "log":
         return cmd_log(graph, args)
     if args.cmd == "show":
