@@ -1,0 +1,239 @@
+"""Multi-session safety: N tenants over one shared store via kishud →
+BENCH_multi.json (DESIGN.md §14).
+
+Two stories, matching the daemon's two claims:
+
+  * **Sessions multiplex without stepping on each other.**  N tenant
+    sessions hammer one store through a single ``Kishud`` — each holds its
+    own namespace lease, chunks dedup store-wide, and every operation is
+    admitted through the two-class queue.  The rows pin aggregate cells/s
+    and the p50/p99 checkout latency a single user feels as N grows (the
+    honest cost of sharing: on one process the sessions contend for the
+    GIL and the admission workers, so per-tenant throughput falls while
+    aggregate throughput holds roughly flat).
+  * **A dead writer's lease is stolen only after a full observed TTL.**
+    A writer commits and is abandoned without releasing (the kill -9
+    model); a contender with ``wait_s=0`` is refused at once, and a
+    patient contender takes over only after the same lease doc has stayed
+    unchanged for the doc's full ``ttl_s`` on the *contender's* monotonic
+    clock — the row records the measured time-to-steal and that the store
+    fscks clean after the successor's first commit.
+
+``smoke()`` is the CI gate: the scaling rows must cover N ∈ {1, 2, 4, 8},
+two concurrent sessions on a memory *and* a dir store must interleave
+commits with bit-identical checkouts, one tenant's ``gc()`` must reap 0
+chunks reachable from the other, and the steal must not beat the TTL.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import threading
+import time
+from typing import Dict, List
+
+import numpy as np
+
+from repro.core import txn
+from repro.core.chunkstore import MemoryStore, open_store
+from repro.core.lease import LeaseHeld
+from repro.core.session import KishuSession
+from repro.launch.kishud import Kishud
+
+
+def _init(ns, elems):
+    ns["w"] = np.zeros(elems, np.float32)
+
+
+def _step(ns, seed):
+    a = ns["w"]
+    a[seed % len(a)] = float(seed)      # one dirty chunk per cell
+
+
+def _wire(sess) -> None:
+    sess.register("init", _init)
+    sess.register("step", _step)
+
+
+# ---------------------------------------------------------------------------
+# story 1: throughput + checkout latency vs N sessions
+# ---------------------------------------------------------------------------
+
+def run_scaling(ns=(1, 2, 4, 8), n_cells: int = 16, elems: int = 1 << 13,
+                chunk_bytes: int = 1 << 12, workers: int = 4,
+                backend: str = "memory") -> List[dict]:
+    rows: List[dict] = []
+    with tempfile.TemporaryDirectory(prefix="kishu_multi_") as tmp:
+        for n in ns:
+            store = (MemoryStore() if backend == "memory"
+                     else open_store(f"dir://{tmp}/scale{n}"))
+            d = Kishud(store, workers=workers, lease_ttl_s=30.0,
+                       chunk_bytes=chunk_bytes)
+            lat_lock = threading.Lock()
+            checkout_s: List[float] = []
+            commit_done: List[float] = []
+            start = threading.Barrier(n + 1)
+
+            def tenant_loop(tid: int) -> None:
+                sess = d.session(f"t{tid}")
+                _wire(sess)
+                sess.init_state({})
+                sess.run("init", elems=elems)
+                start.wait()
+                cids = [sess.run("step", seed=i + 1)
+                        for i in range(n_cells)]
+                done = time.perf_counter()
+                lats = []
+                for cid in cids[-8:]:            # revisit recent commits
+                    t0 = time.perf_counter()
+                    sess.checkout(cid)
+                    lats.append(time.perf_counter() - t0)
+                with lat_lock:
+                    commit_done.append(done)
+                    checkout_s.extend(lats)
+                sess.close()
+
+            threads = [threading.Thread(target=tenant_loop, args=(i,))
+                       for i in range(n)]
+            for t in threads:
+                t.start()
+            start.wait()
+            t0 = time.perf_counter()
+            for t in threads:
+                t.join()
+            wall = max(commit_done) - t0
+            status = d.status()
+            d.close()
+            assert all(r.problems == 0
+                       for r in txn.fsck_all(store).values())
+            rows.append({
+                "bench": "multi", "story": "scaling", "backend": backend,
+                "n_sessions": n, "n_cells_total": n * n_cells,
+                "commit_wall_s": round(wall, 4),
+                "cells_per_s": round(n * n_cells / max(wall, 1e-9), 1),
+                "checkout_p50_ms":
+                    round(float(np.percentile(checkout_s, 50)) * 1e3, 3),
+                "checkout_p99_ms":
+                    round(float(np.percentile(checkout_s, 99)) * 1e3, 3),
+                "store_chunks": status["store_chunks"],
+                "served_interactive":
+                    status["queue"]["served_interactive"],
+            })
+    return rows
+
+
+# ---------------------------------------------------------------------------
+# story 2: lease steal after a killed writer
+# ---------------------------------------------------------------------------
+
+def run_lease_steal(ttl_s: float = 0.4) -> List[dict]:
+    rows: List[dict] = []
+    with tempfile.TemporaryDirectory(prefix="kishu_multi_") as tmp:
+        uri = f"dir://{tmp}/cas"
+        a = KishuSession(open_store(uri), tenant="nb",
+                         lease_ttl_s=ttl_s, chunk_bytes=1 << 12)
+        _wire(a)
+        a.init_state({})
+        a.run("init", elems=1 << 12)
+        survivor = a.run("step", seed=7)
+        expect = a.ns["w"].copy()
+        del a                            # killed: lease doc left behind
+
+        t0 = time.perf_counter()
+        try:
+            KishuSession(open_store(uri), tenant="nb", lease_ttl_s=ttl_s)
+            raise AssertionError("impatient contender was granted a "
+                                 "live writer's lease")
+        except LeaseHeld:
+            refused_at_once = True
+
+        b = KishuSession(open_store(uri), tenant="nb", lease_ttl_s=ttl_s,
+                         lease_wait_s=ttl_s * 10, chunk_bytes=1 << 12)
+        steal_s = time.perf_counter() - t0
+        _wire(b)
+        # rehydrate HEAD (a fresh session attaches with an empty live
+        # namespace), then check out under the stolen lease
+        b.loader.materialize_state(b.tracked, b.graph.head)
+        b.checkout(survivor)
+        assert np.array_equal(b.ns["w"], expect), \
+            "survivor commit not bit-identical after takeover"
+        b.run("step", seed=8)
+        root = b.store.root_store
+        b.close()
+        problems = sum(r.problems for r in txn.fsck_all(root).values())
+        assert steal_s >= ttl_s, \
+            f"lease stolen after {steal_s:.3f}s < ttl {ttl_s}s"
+        assert problems == 0
+        rows.append({
+            "bench": "multi", "story": "lease_steal", "ttl_s": ttl_s,
+            "refused_at_once": refused_at_once,
+            "time_to_steal_s": round(steal_s, 3),
+            "fsck_problems": problems,
+        })
+    return rows
+
+
+def run(**kw) -> List[dict]:
+    return run_scaling(**kw) + run_lease_steal()
+
+
+# ---------------------------------------------------------------------------
+# CI gate
+# ---------------------------------------------------------------------------
+
+def _two_writer_check(store) -> dict:
+    """Two tenants interleave commits through one daemon; every commit
+    must check out bit-identical, and either tenant's gc must reap zero
+    chunks the other can still reach."""
+    d = Kishud(store, workers=2, lease_ttl_s=30.0, chunk_bytes=1 << 12)
+    sessions = {}
+    snaps: Dict[str, Dict[str, np.ndarray]] = {"alice": {}, "bob": {}}
+    for name in ("alice", "bob"):
+        s = d.session(name)
+        _wire(s)
+        s.init_state({})
+        s.run("init", elems=1 << 12)
+        sessions[name] = s
+    for i in range(6):                   # interleaved: a, b, a, b, ...
+        name = "alice" if i % 2 == 0 else "bob"
+        cid = sessions[name].run("step", seed=i + 1)
+        snaps[name][cid] = sessions[name].ns["w"].copy()
+    reaped = sessions["alice"].gc()["chunks_dropped"]
+    assert reaped == 0, \
+        f"alice's gc reaped {reaped} chunks while bob holds references"
+    for name, s in sessions.items():
+        for cid, expect in snaps[name].items():
+            s.checkout(cid)
+            assert np.array_equal(s.ns["w"], expect), \
+                f"{name}:{cid} not bit-identical after concurrent commits"
+        s.close()
+    d.close()
+    reports = txn.fsck_all(store)
+    assert all(r.problems == 0 for r in reports.values()), \
+        {t: r.details for t, r in reports.items() if r.problems}
+    return {"bench": "multi", "story": "two_writer",
+            "n_commits": 6, "gc_cross_reaped": 0, "fsck_problems": 0}
+
+
+def smoke() -> List[dict]:
+    """CI gate: scaling rows for N ∈ {1,2,4,8}; two concurrent sessions on
+    memory and dir stores interleave safely; steal never beats the TTL."""
+    rows = (run_scaling(ns=(1, 2, 4, 8), n_cells=6)
+            + run_lease_steal(ttl_s=0.3))
+
+    by_n = {r["n_sessions"]: r for r in rows if r["story"] == "scaling"}
+    assert sorted(by_n) == [1, 2, 4, 8], f"missing N rows: {sorted(by_n)}"
+    for n, r in by_n.items():
+        assert r["cells_per_s"] > 0 and r["checkout_p99_ms"] > 0, r
+
+    steal = next(r for r in rows if r["story"] == "lease_steal")
+    assert steal["refused_at_once"] and steal["fsck_problems"] == 0
+    assert steal["time_to_steal_s"] >= steal["ttl_s"]
+
+    with tempfile.TemporaryDirectory(prefix="kishu_multi_") as tmp:
+        for backend in ("memory", "dir"):
+            store = (MemoryStore() if backend == "memory"
+                     else open_store(f"dir://{os.path.join(tmp, 'cas')}"))
+            row = _two_writer_check(store)
+            rows.append({**row, "backend": backend})
+    return rows

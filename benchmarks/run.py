@@ -103,6 +103,16 @@ def bench_txn(quick: bool):
     return rows
 
 
+def bench_multi(quick: bool):
+    """Multi-session safety: N tenants over one shared store via kishud —
+    aggregate cells/s + p50/p99 checkout latency vs N, lease-steal
+    recovery after a killed writer.  Writes BENCH_multi.json."""
+    from benchmarks import bench_multi as b
+    rows = b.run(n_cells=8) if quick else b.run(n_cells=32)
+    _write_bench_json("BENCH_multi.json", rows)
+    return rows
+
+
 def bench_tracking(quick: bool):
     """Table 6 / Fig 17 (tracking overhead)."""
     from benchmarks import bench_tracking as b
@@ -165,6 +175,7 @@ ALL = {
     "delta": bench_delta,
     "fabric": bench_fabric,
     "txn": bench_txn,
+    "multi": bench_multi,
     "tracking": bench_tracking,
     "covar_sweep": bench_covar_sweep,
     "scalability": bench_scalability,
@@ -188,6 +199,10 @@ def main() -> None:
                     help="fast CI gate: transactional commit engine — "
                          "group-commit amortization + crash-recovery "
                          "assertions + BENCH_txn.json")
+    ap.add_argument("--smoke-multi", action="store_true",
+                    help="fast CI gate: multi-session safety — N-session "
+                         "scaling rows, two-writer interleave, lease-steal "
+                         "assertions + BENCH_multi.json")
     args = ap.parse_args()
     if args.smoke:
         from benchmarks import bench_delta as b
@@ -209,6 +224,13 @@ def main() -> None:
         _print_rows(rows)
         _write_bench_json("BENCH_txn.json", rows)
         print("# txn smoke OK", flush=True)
+        return
+    if args.smoke_multi:
+        from benchmarks import bench_multi as b
+        rows = b.smoke()        # raises AssertionError on regression
+        _print_rows(rows)
+        _write_bench_json("BENCH_multi.json", rows)
+        print("# multi smoke OK", flush=True)
         return
     names = [args.only] if args.only else list(ALL)
     for name in names:

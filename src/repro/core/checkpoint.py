@@ -360,8 +360,11 @@ class CheckpointWriter:
             manifests[key_str(key)] = man
         self._flush_batch()                  # sync mode: durable on return
         if self.async_write and self.write_deadline_s:
-            deadline = time.time() + self.write_deadline_s
-            while self.pending_keys and time.time() < deadline:
+            # monotonic, never wall-clock: an NTP step would expire this
+            # deadline instantly (spurious drain timeout -> the commit
+            # references still-pending chunks) or push it out indefinitely
+            deadline = time.monotonic() + self.write_deadline_s
+            while self.pending_keys and time.monotonic() < deadline:
                 time.sleep(0.001)
             # anything still pending is left to the background writer;
             # checkout before completion falls back to recomputation.

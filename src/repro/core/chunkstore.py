@@ -838,6 +838,132 @@ class CompressedStore(ChunkStore):
 
 
 # ---------------------------------------------------------------------------
+# per-tenant namespaces
+# ---------------------------------------------------------------------------
+
+TENANT_PREFIX = "tenant/"
+
+
+def validate_tenant_id(tenant: str) -> str:
+    """Tenant ids become meta-name path components, so they must survive
+    every backend's name encoding — in particular DirectoryStore maps
+    ``/`` to ``__``, which makes both characters ambiguous inside an id."""
+    if not tenant or not all(c.isalnum() or c in ".-" for c in tenant):
+        raise ValueError(
+            f"invalid tenant id {tenant!r}: need [A-Za-z0-9.-]+")
+    return tenant
+
+
+def tenant_ids(store: "ChunkStore") -> List[str]:
+    """Tenant namespaces present in a *root* store, from its meta listing."""
+    seen = []
+    for name in store.list_meta(TENANT_PREFIX):
+        tid = name[len(TENANT_PREFIX):].split("/", 1)[0]
+        if tid and tid not in seen:
+            seen.append(tid)
+    return seen
+
+
+class NamespacedStore(ChunkStore):
+    """Per-tenant view of a shared store: every metadata name is prefixed
+    ``tenant/<id>/`` while **chunks pass through unprefixed** — tenants get
+    isolated checkpoint graphs, branches, and txn journals, but share one
+    content-addressed chunk space, so identical data across sessions is
+    stored once (the cross-session dedup the fabric exists for).
+
+    The flip side of shared chunks is that no single tenant may delete a
+    chunk just because *its* graph dropped the last reference — GC and
+    recovery rollback must consult every namespace (txn.global_live_chunks).
+    """
+
+    def __init__(self, inner: ChunkStore, tenant: str):
+        self.inner = inner
+        self.tenant_id = validate_tenant_id(tenant)
+        self.meta_prefix = TENANT_PREFIX + self.tenant_id + "/"
+        self.min_slab = getattr(inner, "min_slab", 1)
+        self.supports_parallel_get = getattr(inner, "supports_parallel_get",
+                                             True)
+        self.native_scatter = getattr(inner, "native_scatter", False)
+
+    @property
+    def root_store(self) -> ChunkStore:
+        """The shared (un-namespaced) store, for cross-tenant operations."""
+        return self.inner
+
+    def _n(self, name: str) -> str:
+        return self.meta_prefix + name
+
+    # ---- chunks: shared, pass-through ----
+    def put_chunk(self, key, data):
+        return self.inner.put_chunk(key, data)
+
+    def put_chunks(self, pairs):
+        return self.inner.put_chunks(pairs)
+
+    def get_chunk(self, key):
+        return self.inner.get_chunk(key)
+
+    def get_chunk_stored(self, key):
+        return self.inner.get_chunk_stored(key)
+
+    def get_chunks(self, keys, *, missing_ok=False):
+        return self.inner.get_chunks(keys, missing_ok=missing_ok)
+
+    def has_chunk(self, key):
+        return self.inner.has_chunk(key)
+
+    def list_chunk_keys(self):
+        return self.inner.list_chunk_keys()
+
+    def chunk_sizes(self, keys):
+        return self.inner.chunk_sizes(keys)
+
+    def delete_chunk(self, key):
+        self.inner.delete_chunk(key)
+
+    def delete_chunks(self, keys):
+        return self.inner.delete_chunks(keys)
+
+    # ---- meta: prefixed ----
+    def put_meta(self, name, doc):
+        self.inner.put_meta(self._n(name), doc)
+
+    def put_meta_batch(self, docs):
+        self.inner.put_meta_batch({self._n(n): d for n, d in docs.items()})
+
+    def get_meta(self, name):
+        return self.inner.get_meta(self._n(name))
+
+    def list_meta(self, prefix):
+        cut = len(self.meta_prefix)
+        return [n[cut:] for n in self.inner.list_meta(self._n(prefix))]
+
+    def delete_meta(self, name):
+        self.inner.delete_meta(self._n(name))
+
+    def delete_meta_batch(self, names):
+        self.inner.delete_meta_batch([self._n(n) for n in names])
+
+    def chunk_bytes_total(self):
+        return self.inner.chunk_bytes_total()
+
+    def n_chunks(self):
+        return self.inner.n_chunks()
+
+
+def namespace_views(store: "ChunkStore") -> List[Tuple[str, "ChunkStore"]]:
+    """Every checkpoint namespace reachable through ``store``: the root
+    namespace itself plus one :class:`NamespacedStore` view per tenant.
+    If ``store`` is already a tenant view, enumeration happens on its root
+    (so cross-namespace invariants hold no matter which view asks)."""
+    root = store.root_store if isinstance(store, NamespacedStore) else store
+    views: List[Tuple[str, ChunkStore]] = [("", root)]
+    views.extend((tid, NamespacedStore(root, tid))
+                 for tid in tenant_ids(root))
+    return views
+
+
+# ---------------------------------------------------------------------------
 # fault injection
 # ---------------------------------------------------------------------------
 
@@ -1030,7 +1156,7 @@ class FaultInjectingStore(ChunkStore):
         return self.inner.n_chunks()
 
 
-def open_store(uri: str, codec=None) -> ChunkStore:
+def open_store(uri: str, codec=None, tenant: Optional[str] = None) -> ChunkStore:
     """"memory://", "dir:///path", "sqlite:///path.db", a bare path, or a
     "fabric://TOPOLOGY" composition (fabric.py) — e.g.
     ``fabric://shard(dir:///s0,dir:///s1)`` or ``fabric://rep(a,b)``.
@@ -1038,9 +1164,21 @@ def open_store(uri: str, codec=None) -> ChunkStore:
     A ``?codec=NAME`` suffix (or the ``codec`` argument) wraps the store in
     :class:`CompressedStore` — e.g. ``sqlite:///ckpt.db?codec=auto`` or
     ``fabric://shard(...)?codec=zlib``.  Reading never needs the suffix:
-    frames are decoded transparently."""
-    if "?codec=" in uri:
-        uri, _, codec = uri.partition("?codec=")
+    frames are decoded transparently.
+
+    A ``?tenant=ID`` suffix (or the ``tenant`` argument) scopes the opened
+    store to that tenant's namespace (:class:`NamespacedStore`); combine
+    with ``&``: ``dir:///ckpt?codec=auto&tenant=alice``."""
+    if "?" in uri:
+        uri, _, query = uri.partition("?")
+        for part in query.split("&"):
+            key, _, val = part.partition("=")
+            if key == "codec":
+                codec = val
+            elif key == "tenant":
+                tenant = val
+            elif part:
+                raise ValueError(f"unknown store URI option {part!r}")
     if uri.startswith("fabric://"):
         from repro.core.fabric import parse_topology
         store: ChunkStore = parse_topology(uri[len("fabric://"):])
@@ -1053,5 +1191,7 @@ def open_store(uri: str, codec=None) -> ChunkStore:
     else:
         store = DirectoryStore(uri)
     if resolve_codec(codec) is not None:
-        return CompressedStore(store, codec)
+        store = CompressedStore(store, codec)
+    if tenant:
+        store = NamespacedStore(store, tenant)
     return store

@@ -47,7 +47,8 @@ from typing import Dict, Iterable, List, Optional, Sequence, Tuple
 
 from repro.core import parallel
 from repro.core.chunkstore import (ChunkCache, ChunkStore, CompressedStore,
-                                   FaultInjectedStore, chunk_key, open_store)
+                                   FaultInjectedStore, NamespacedStore,
+                                   chunk_key, open_store)
 from repro.core.serialize import ChunkMissingError
 
 DEFAULT_VNODES = 64
@@ -663,6 +664,9 @@ def topology_lines(store: ChunkStore, indent: str = "") -> List[str]:
         return [f"{indent}codec({name})"] + topology_lines(store.inner, bump)
     if isinstance(store, FaultInjectedStore):
         return [f"{indent}fault-injected"] + topology_lines(store.inner, bump)
+    if isinstance(store, NamespacedStore):
+        return ([f"{indent}tenant({store.tenant_id})"]
+                + topology_lines(store.inner, bump))
     root = getattr(store, "root", None) or getattr(store, "path", None)
     kind = type(store).__name__
     return [f"{indent}{kind}({root})" if root else f"{indent}{kind}"]
@@ -759,7 +763,8 @@ def _scrub_walk(store: ChunkStore, repair: bool, deep: bool,
             _scrub_walk(s, repair, deep, report)
     elif isinstance(store, TieredStore):
         _scrub_walk(store.cold, repair, deep, report)
-    elif isinstance(store, (CompressedStore, FaultInjectedStore)):
+    elif isinstance(store, (CompressedStore, FaultInjectedStore,
+                            NamespacedStore)):
         _scrub_walk(store.inner, repair, deep, report)
     elif deep:
         _scrub_leaf_deep(store, report)
@@ -804,7 +809,8 @@ def rebalance(store: ChunkStore) -> Dict[str, int]:
                 walk(child)
         elif isinstance(s, TieredStore):
             walk(s.cold)
-        elif isinstance(s, (CompressedStore, FaultInjectedStore)):
+        elif isinstance(s, (CompressedStore, FaultInjectedStore,
+                            NamespacedStore)):
             walk(s.inner)
 
     walk(store)

@@ -44,6 +44,83 @@ def manifest_chunk_keys(manifests: Dict[str, dict]):
             yield c["key"]
 
 
+def manifest_chunk_entries(manifests: Dict[str, dict]):
+    """Like :func:`manifest_chunk_keys` but yields ``(key, nbytes)`` pairs
+    (the manifest's per-chunk logical length), for refcount accounting."""
+    for man in manifests.values():
+        if man.get("unserializable"):
+            continue
+        for c in man.get("base", {}).get("chunks", []):
+            yield c["key"], int(c.get("n", 0))
+
+
+#: per-namespace chunk refcount document.  Rides the same atomic publish
+#: batch as the commit docs and HEAD, so it can never disagree with the
+#: published graph — crash recovery's roll-forward replays it with them.
+REFS_DOC = "refs"
+
+
+class ChunkRefCounts:
+    """Chunk refcounts for one namespace: ``{key: [n_commits, nbytes]}``.
+
+    Counts are per *commit* (a commit referencing one key from several
+    co-variables counts once), so ``add``/``remove`` of the same commit's
+    manifests are exactly symmetric.  The count answers cross-session GC's
+    question — "does any commit in this namespace still need this chunk?"
+    — in one meta read instead of a full commit walk, and the per-key
+    ``nbytes`` gives the byte total quotas are enforced against
+    (:meth:`bytes_live` counts shared chunks toward every tenant that
+    references them: dedup is a storage win, not a billing loophole)."""
+
+    def __init__(self, counts: Optional[Dict[str, list]] = None):
+        self.counts: Dict[str, list] = counts or {}
+
+    @classmethod
+    def from_doc(cls, doc: Optional[dict]) -> "ChunkRefCounts":
+        return cls({k: list(v) for k, v in
+                    (doc or {}).get("counts", {}).items()})
+
+    @classmethod
+    def from_nodes(cls, nodes: Dict[str, "CommitNode"]) -> "ChunkRefCounts":
+        """Rebuild from a loaded graph — the upgrade path for stores
+        written before refcounts existed."""
+        refs = cls()
+        for node in nodes.values():
+            refs.add(node.manifests)
+        return refs
+
+    def to_doc(self) -> dict:
+        return {"counts": {k: v for k, v in self.counts.items() if v[0] > 0}}
+
+    def add(self, manifests: Dict[str, dict]) -> None:
+        seen = set()
+        for key, nbytes in manifest_chunk_entries(manifests):
+            if key in seen:
+                continue
+            seen.add(key)
+            cn = self.counts.setdefault(key, [0, nbytes])
+            cn[0] += 1
+            cn[1] = max(cn[1], nbytes)
+
+    def remove(self, manifests: Dict[str, dict]) -> None:
+        seen = set()
+        for key, _ in manifest_chunk_entries(manifests):
+            if key in seen:
+                continue
+            seen.add(key)
+            cn = self.counts.get(key)
+            if cn is not None:
+                cn[0] -= 1
+                if cn[0] <= 0:
+                    del self.counts[key]
+
+    def live_keys(self) -> set:
+        return {k for k, cn in self.counts.items() if cn[0] > 0}
+
+    def bytes_live(self) -> int:
+        return sum(cn[1] for cn in self.counts.values() if cn[0] > 0)
+
+
 @dataclass
 class CommitNode:
     commit_id: str
@@ -131,11 +208,27 @@ class CheckpointGraph:
         if head_doc:
             self.head = head_doc["head"]
             self._seq = head_doc["seq"]
+        refs_doc = self.store.get_meta(REFS_DOC)
+        if refs_doc is not None:
+            self.refs = ChunkRefCounts.from_doc(refs_doc)
+        else:
+            # pre-refcount store: rebuild from the loaded commits; the doc
+            # itself first lands with the next publish that carries it
+            self.refs = ChunkRefCounts.from_nodes(self.nodes)
 
     def _persist(self, node: CommitNode) -> None:
         doc = node.to_doc()
         self._meta_bytes += len(json.dumps(doc))
-        docs = {f"commit/{node.commit_id}": doc,
+        self.refs.add(node.manifests)
+        # the refcount doc travels in the same atomic batch as the commit
+        # and HEAD: a torn publish (or its crash-recovery replay) can never
+        # leave counts disagreeing with the published graph.  Order is
+        # refs -> commit doc -> HEAD: on a decomposing backend the commit
+        # doc still lands immediately before HEAD, preserving the
+        # invariant that a torn publish never leaves HEAD naming an absent
+        # commit (recovery squares the refs ledger either way)
+        docs = {REFS_DOC: self.refs.to_doc(),
+                f"commit/{node.commit_id}": doc,
                 "HEAD": {"head": self.head, "seq": self._seq}}
         if self.engine is not None:
             self.engine.commit(docs)
@@ -192,17 +285,29 @@ class CheckpointGraph:
             # publish any queued commits first: durable HEAD must never
             # name a commit whose doc is still in an open group
             self.engine.flush()
-        self.store.put_meta_batch(
-            {"HEAD": {"head": self.head, "seq": self._seq}})
+        # every HEAD movement — checkout included — advances seq, so a
+        # concurrent (or resurrected) writer holding a stale seq fails the
+        # publish guard instead of silently rewinding the branch.  Commit
+        # ids derive from seq, so ids skip a number after a checkout;
+        # nothing orders by density, only by monotonicity.
+        self._seq += 1
+        docs = {"HEAD": {"head": self.head, "seq": self._seq}}
+        from repro.core import txn as txn_mod
+        txn_mod.check_publish_guard(self.store, docs,
+                                    lease=getattr(self.engine, "lease",
+                                                  None))
+        self.store.put_meta_batch(docs)
 
     def forget(self, commit_id: str) -> None:
         """Drop a commit from the in-memory graph (branch deletion),
-        keeping children and the cached meta-bytes accounting in step.
-        The caller owns the on-store tombstone."""
+        keeping children, refcounts, and the cached meta-bytes accounting
+        in step.  The caller owns the on-store tombstone (and persists the
+        decremented refcount doc in the same batch)."""
         node = self.nodes.pop(commit_id, None)
         if node is None:
             return
         self._meta_bytes -= len(json.dumps(node.to_doc()))
+        self.refs.remove(node.manifests)
         self.children.pop(commit_id, None)
         if node.parent in self.children:
             self.children[node.parent] = [

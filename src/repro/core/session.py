@@ -23,14 +23,23 @@ from typing import Any, Callable, Dict, List, Optional
 from repro.core import hashing
 from repro.core.checkpoint import CheckpointWriter, WriteStats
 from repro.core.checkout import CheckoutStats, StateLoader
-from repro.core.chunkstore import ChunkCache, ChunkStore
+from repro.core.chunkstore import ChunkCache, ChunkStore, NamespacedStore
 from repro.core.covariable import (CovKey, RecordBuilder, StateDelta,
                                    detect_delta, group_covariables)
-from repro.core.graph import CheckpointGraph, key_str
+from repro.core.graph import (CheckpointGraph, key_str,
+                              manifest_chunk_entries)
+from repro.core.lease import Lease
 from repro.core.namespace import Namespace, TrackedNamespace
 from repro.core.restore import DataRestorer
-from repro.core.txn import TxnEngine
+from repro.core.txn import TxnEngine, global_live_chunks
 from repro.core.txn import purge_tombstones as txn_purge_tombstones
+
+
+class QuotaExceededError(RuntimeError):
+    """A commit would push the tenant's referenced bytes past its quota.
+    The cell has already executed (the namespace is mutated) but nothing
+    was committed; chunks staged for the rejected commit surface as
+    dangling and are reclaimed by the next ``gc()``."""
 
 
 @dataclass
@@ -69,15 +78,42 @@ class KishuSession:
                  io_threads: Optional[int] = None,
                  cache_bytes: Optional[int] = None,
                  group_commit_n: int = 1,
-                 async_publish: bool = False):
+                 async_publish: bool = False,
+                 tenant: Optional[str] = None,
+                 quota_bytes: Optional[int] = None,
+                 lease_ttl_s: Optional[float] = None,
+                 lease_wait_s: float = 0.0,
+                 lease_steal: bool = False,
+                 chunk_cache: Optional[ChunkCache] = None):
+        # multi-session knobs (DESIGN.md §14):
+        #   tenant       — scope this session to `tenant/<id>/` metadata on
+        #                  the shared store (chunks stay shared/deduped)
+        #   quota_bytes  — refuse commits once the tenant's referenced
+        #                  bytes pass this (QuotaExceededError)
+        #   lease_ttl_s  — acquire the namespace's writer lease before
+        #                  opening the graph; None (default) runs
+        #                  lease-less with only the HEAD-seq guard, which
+        #                  keeps single-writer usage zero-cost
+        #   chunk_cache  — share one cache across sessions (kishud)
+        if tenant is not None and not isinstance(store, NamespacedStore):
+            store = NamespacedStore(store, tenant)
         self.store = store
+        self.tenant = getattr(store, "tenant_id", None)
+        self.quota_bytes = quota_bytes
+        # the lease is taken BEFORE recovery/graph construction: rolling
+        # back a journal requires proving its writer is gone, and holding
+        # the namespace's writer lease is exactly that proof
+        self.lease: Optional[Lease] = None
+        if lease_ttl_s is not None:
+            self.lease = Lease(store, ttl_s=lease_ttl_s).acquire(
+                wait_s=lease_wait_s, steal=lease_steal)
         self.ns = Namespace()
         self.tracked = TrackedNamespace(self.ns)
         self.builder = RecordBuilder(chunk_bytes, hasher=hasher)
         # one chunk cache shared by writer and loader: checking out a
         # just-committed state is served from memory, not the backend
         # (cache_bytes=0 disables; default $KISHU_CACHE_BYTES or 64 MiB)
-        self.chunk_cache = ChunkCache(cache_bytes)
+        self.chunk_cache = chunk_cache or ChunkCache(cache_bytes)
         self.writer = CheckpointWriter(store, chunk_bytes=chunk_bytes,
                                        async_write=async_write,
                                        write_deadline_s=write_deadline_s,
@@ -104,6 +140,7 @@ class KishuSession:
                                 # detach at kick time; the async drain
                                 # journals with a lag the fence bounds
                                 early_snapshot=not async_write)
+        self.engine.lease = self.lease    # checked/renewed on every publish
         self.writer.journal = self.engine.journal_chunks
         # graph open runs txn.recover first: a crashed predecessor's
         # unsealed transactions are replayed or rolled back before loading
@@ -204,6 +241,8 @@ class KishuSession:
         stats.write_s = time.perf_counter() - t0
         stats.write = wstats
 
+        if self.quota_bytes is not None:
+            self._check_quota(manifests)
         node = self.graph.commit(
             command={"name": plan.name, "args": plan.args},
             manifests=manifests,
@@ -225,6 +264,26 @@ class KishuSession:
         stats.total_s = time.perf_counter() - plan.t_all
         self.last_run = stats
         return node.commit_id
+
+    def _check_quota(self, manifests: Dict[str, dict]) -> None:
+        """Enforce the tenant byte quota *before* the commit publishes:
+        current referenced bytes (from the refcount ledger) plus the bytes
+        this commit would newly reference.  Chunks already counted by this
+        namespace add nothing — quota follows references, like the ledger."""
+        new_bytes = 0
+        seen = set()
+        for key, nbytes in manifest_chunk_entries(manifests):
+            if key in seen or key in self.graph.refs.counts:
+                continue
+            seen.add(key)
+            new_bytes += nbytes
+        used = self.graph.refs.bytes_live()
+        if used + new_bytes > self.quota_bytes:
+            raise QuotaExceededError(
+                f"tenant {self.tenant or '<root>'}: commit would reference "
+                f"{used + new_bytes} bytes > quota {self.quota_bytes} "
+                f"(currently {used}); delete branches and gc(), or raise "
+                f"the quota")
 
     def _prev_manifest(self, key: CovKey) -> Optional[dict]:
         ver = self.graph.nodes[self.graph.head].state_index.get(key_str(key))
@@ -277,9 +336,17 @@ class KishuSession:
             node = self.graph.nodes[node.parent]
         head_path = set(self.graph.path_from_root(self.graph.head))
         doomed = [c for c in doomed if c not in head_path]
+        if not doomed:
+            return doomed
         for cid in doomed:
-            self.graph.forget(cid)
-            self.store.put_meta(f"commit/{cid}", {"deleted": True})
+            self.graph.forget(cid)      # updates in-memory refcounts too
+        # tombstones + the decremented refcount ledger land in ONE batch:
+        # a crash between them could otherwise leave counts claiming
+        # chunks that no commit references (or vice versa)
+        from repro.core.graph import REFS_DOC
+        batch = {f"commit/{cid}": {"deleted": True} for cid in doomed}
+        batch[REFS_DOC] = self.graph.refs.to_doc()
+        self.store.put_meta_batch(batch)
         return doomed
 
     def gc(self) -> dict:
@@ -295,7 +362,11 @@ class KishuSession:
         self.engine.flush()     # unpublished manifests must be visible to
                                 # fsck/other readers before their chunks
                                 # are judged live
-        live = self.graph.live_chunk_keys()
+        # the mark set is CROSS-SESSION: this graph's references plus every
+        # other namespace's published refcounts plus any sibling's unsealed
+        # journal — chunks are shared, so gc may only reap what NO session
+        # can reach (ISSUE 6's refcounted-GC invariant)
+        live = self.graph.live_chunk_keys() | global_live_chunks(self.store)
         dead = [k for k in self.store.list_chunk_keys() if k not in live]
         freed = sum(self.store.chunk_sizes(dead).values())
         self.store.delete_chunks(dead)
@@ -304,12 +375,19 @@ class KishuSession:
                 "chunks_live": len(live), "tombstones_purged": purged}
 
     def storage_stats(self) -> dict:
-        return {"chunk_bytes": self.store.chunk_bytes_total(),
-                "n_chunks": self.store.n_chunks(),
-                "graph_meta_bytes": self.graph.total_meta_bytes(),
-                "n_commits": len(self.graph.nodes),
-                "txn_publishes": self.engine.stats.publishes,
-                "txn_journal_puts": self.engine.stats.journal_puts}
+        out = {"chunk_bytes": self.store.chunk_bytes_total(),
+               "n_chunks": self.store.n_chunks(),
+               "graph_meta_bytes": self.graph.total_meta_bytes(),
+               "n_commits": len(self.graph.nodes),
+               "txn_publishes": self.engine.stats.publishes,
+               "txn_journal_puts": self.engine.stats.journal_puts,
+               "tenant": self.tenant,
+               "tenant_ref_bytes": self.graph.refs.bytes_live(),
+               "quota_bytes": self.quota_bytes}
+        if self.lease is not None:
+            out["lease_owner"] = self.lease.owner
+            out["lease_token"] = self.lease.token
+        return out
 
     def close(self) -> None:
         try:
@@ -321,3 +399,5 @@ class KishuSession:
             # the next open's recovery problem, not a thread leak
             self.engine.close()
             self.writer.close()
+            if self.lease is not None:
+                self.lease.release()

@@ -68,11 +68,13 @@ from __future__ import annotations
 import os
 import threading
 import time
+import uuid
 from dataclasses import dataclass, field
-from typing import Callable, Dict, List, Optional
+from typing import Callable, Dict, List, Optional, Set
 
-from repro.core.chunkstore import ChunkStore
-from repro.core.graph import manifest_chunk_keys
+from repro.core.chunkstore import ChunkStore, namespace_views
+from repro.core.graph import REFS_DOC, manifest_chunk_keys
+from repro.core.lease import Lease, LeaseError
 
 TXN_PREFIX = "txn/"
 PART_SEP = ".p"               # txn/<id>.pNNNN — per-batch chunk-key parts
@@ -83,6 +85,38 @@ STATUS_PUBLISH = "publish"    # fence passed, docs in WAL: roll forward
 class TxnError(RuntimeError):
     """A publish failed (or the engine is poisoned by a failed chunk
     fence); surfaced on the commit/flush that observes it."""
+
+
+class StaleHeadError(TxnError):
+    """A publish would move HEAD *backwards*: the durable HEAD's ``seq`` is
+    already at or past the one being published, meaning another writer (or
+    an older resurrected session) has advanced the branch since this
+    session loaded it.  Publishing anyway would orphan the newer commits —
+    the `graph.py` read-modify-write race this guard turns into a hard
+    fail.  Leases make the race unreachable in normal operation; the guard
+    stays as defense in depth for lease-less sessions."""
+
+
+def check_publish_guard(store: ChunkStore, docs: Dict[str, dict], *,
+                        lease: Optional[Lease] = None) -> None:
+    """The two pre-publish safety checks, shared by the engine and by
+    direct metadata publishes (``graph.set_head``): the writer still holds
+    its lease (:class:`~repro.core.lease.LeaseLost` if not), and the HEAD
+    being published strictly advances the durable ``seq``
+    (:class:`StaleHeadError` if not).  Reads only — never counted by
+    crash-injection op sweeps."""
+    if lease is not None:
+        lease.ensure()
+    head = docs.get("HEAD")
+    if head is not None:
+        cur = store.get_meta("HEAD")
+        if cur is not None \
+                and int(cur.get("seq", -1)) >= int(head.get("seq", -1)):
+            raise StaleHeadError(
+                f"durable HEAD seq {cur.get('seq')} >= publishing seq "
+                f"{head.get('seq')}: another writer advanced this branch "
+                f"(durable head={cur.get('head')!r}); reopen the session "
+                f"to continue from the new state")
 
 
 @dataclass
@@ -125,6 +159,13 @@ class TxnEngine:
         # with a lag, so there the snapshot must wait until after the
         # fence (see _publish_group).
         self.early_snapshot = early_snapshot
+        #: optional writer lease checked (and kept renewed) on every
+        #: publish; set by the owning session after acquisition
+        self.lease: Optional[Lease] = None
+        #: per-engine nonce for journal IDs — two engines in one process
+        #: share a pid and both start their counters at zero, so pid +
+        #: counter alone collide when they open within the same ms
+        self._nonce = uuid.uuid4().hex[:6]
         self.stats = TxnStats()
         self._lock = threading.RLock()     # open-group state
         self._pub_lock = threading.Lock()  # publishes are serialized
@@ -149,9 +190,12 @@ class TxnEngine:
     # ------------------------------------------------------------------
     def _ensure_open(self) -> None:
         if self._open is None:
-            # unique across sessions sharing a store: time + pid + counter
+            # unique across sessions sharing a store: time + pid + a random
+            # per-engine nonce + counter — pid alone is not enough (kishud
+            # runs many engines in one process) and the ms timestamp alone
+            # is not either (two sessions commit in the same millisecond)
             tid = (f"{int(time.time() * 1000):013d}"
-                   f"-{os.getpid()}-{self._n:04d}")
+                   f"-{os.getpid()}-{self._nonce}-{self._n:04d}")
             self._n += 1
             self._open_name = TXN_PREFIX + tid
             # nothing is written to the store yet: the open state exists
@@ -259,18 +303,22 @@ class TxnEngine:
             [f"{name}{PART_SEP}{i:04d}" for i in range(parts)] + [name])
 
     def _abort(self, snap, cause: Exception) -> None:
-        """Fence failure: the group references chunks that never became
-        durable.  Roll the group back in-store (journal + journaled
-        chunks) and poison the engine — the in-memory graph is ahead of
-        durable state now, and publishing any descendant would tear the
-        store."""
+        """Fence or guard failure: the group must not publish.  Roll it
+        back in-store (journal + journaled chunks) and poison the engine —
+        the in-memory graph is ahead of durable state now, and publishing
+        any descendant would tear the store.  The chunk delete is filtered
+        against every published reference in every namespace: under
+        content addressing a journaled key may coincide with a chunk some
+        other commit (ours or another tenant's) already owns."""
         self._poisoned = cause
         rec, name, parts = snap
         if rec is None:
             return
         try:
             if rec["chunks"]:
-                self.store.delete_chunks(rec["chunks"])
+                protected = published_chunks(self.store, use_refs=False)
+                self.store.delete_chunks(
+                    [k for k in rec["chunks"] if k not in protected])
             self._seal(name, parts)
         except Exception:  # noqa: BLE001 — backend down: recovery on next
             pass           # open rolls the journal back instead
@@ -302,11 +350,24 @@ class TxnEngine:
                 return
             if not rec["docs"]:
                 # chunks journaled but no commit ever referenced them
-                # (flush mid-delta): roll the group back ourselves
+                # (flush mid-delta): roll the group back ourselves —
+                # filtered like every rollback, since a journaled key may
+                # coincide with published content
                 if rec["chunks"]:
-                    self.store.delete_chunks(rec["chunks"])
+                    protected = published_chunks(self.store, use_refs=False)
+                    self.store.delete_chunks(
+                        [k for k in rec["chunks"] if k not in protected])
                 self._seal(name, parts)
                 return
+            try:
+                # writer still leased + HEAD strictly advances: both are
+                # store reads, checked as late as possible before the batch
+                check_publish_guard(self.store, rec["docs"],
+                                    lease=self.lease)
+            except (LeaseError, StaleHeadError) as e:
+                self._abort((rec, name, parts), e)
+                raise TxnError("publish refused: another writer owns this "
+                               "branch; transaction rolled back") from e
             t0 = time.perf_counter()
             rec["status"] = STATUS_PUBLISH
             # the point of no return rides the atomic publish itself: the
@@ -382,6 +443,64 @@ def _referenced_chunks(store: ChunkStore) -> set:
     return refs
 
 
+# ---------------------------------------------------------------------------
+# cross-namespace reference accounting
+# ---------------------------------------------------------------------------
+#
+# Chunks are content-addressed and SHARED across tenant namespaces (that is
+# the dedup win), so no delete may consult a single namespace's references:
+# rollback, abort, gc, and fsck's dangling check all build their live set
+# from every namespace reachable through the store.
+
+def published_chunks(store: ChunkStore, *, use_refs: bool = True) -> Set[str]:
+    """Chunks referenced by published (non-tombstone) commits in *every*
+    namespace of ``store`` — the root graph plus each ``tenant/<id>/``.
+
+    With ``use_refs`` a namespace that maintains the transactional refcount
+    doc (graph.REFS_DOC, kept consistent by riding the atomic publish
+    batch) is read in one meta get; namespaces without one fall back to
+    walking their commit docs.  Safety-critical delete filters pass
+    ``use_refs=False`` to always walk — the authoritative source."""
+    refs: Set[str] = set()
+    for _, view in namespace_views(store):
+        doc = view.get_meta(REFS_DOC) if use_refs else None
+        counts = (doc or {}).get("counts")
+        if counts is not None:
+            refs.update(k for k, cn in counts.items() if cn[0] > 0)
+        else:
+            refs.update(_referenced_chunks(view))
+    return refs
+
+
+def journaled_chunks(store: ChunkStore, *,
+                     skip_own: bool = False) -> Set[str]:
+    """Chunks named by unsealed txn journals (base records + part docs)
+    across every namespace.  These landed in the store but are not yet
+    referenced by any commit — a *sibling session mid-transaction* — so
+    cross-session GC must treat them as live.  ``skip_own`` excludes the
+    namespace ``store`` itself is scoped to (rollback of our own dead
+    journals must still protect every *other* namespace's in-flight
+    chunks, but not its own)."""
+    own_prefix = getattr(store, "meta_prefix", "")
+    out: Set[str] = set()
+    for tid, view in namespace_views(store):
+        if skip_own and getattr(view, "meta_prefix", "") == own_prefix:
+            continue
+        for name in view.list_meta(TXN_PREFIX):
+            doc = view.get_meta(name) or {}
+            out.update(doc.get("chunks", []) or [])
+    return out
+
+
+def global_live_chunks(store: ChunkStore, *,
+                       use_refs: bool = True) -> Set[str]:
+    """The full cross-session live set: published references in every
+    namespace plus every unsealed journal's chunks.  ``gc()`` may reap
+    exactly the stored chunks NOT in this set."""
+    return published_chunks(store, use_refs=use_refs) | \
+        journaled_chunks(store)
+
+
 def recover(store: ChunkStore) -> Dict[str, int]:
     """Replay or roll back every unsealed transaction.  Idempotent; runs on
     every graph/session open (a store with no ``txn/`` docs pays one
@@ -438,15 +557,19 @@ def recover(store: ChunkStore) -> Dict[str, int]:
         out["replayed"] += 1
         out["commits_published"] += sum(1 for n in docs if n != "HEAD")
         seal(base)
-    referenced = None
+    protected = None
     for base, rec in bases.items():             # pass 2: roll back
         if rec and rec.get("status") == STATUS_PUBLISH:
             continue
         chunks = ((rec or {}).get("chunks", []) or []) + part_chunks(base)
         if chunks:
-            if referenced is None:
-                referenced = _referenced_chunks(store)
-            doomed = [k for k in chunks if k not in referenced]
+            if protected is None:
+                # global: chunks are shared across namespaces, so the
+                # delete must spare content published by ANY tenant and
+                # content journaled by a sibling still mid-transaction
+                protected = published_chunks(store, use_refs=False) \
+                    | journaled_chunks(store, skip_own=True)
+            doomed = [k for k in chunks if k not in protected]
             out["chunks_dropped"] += store.delete_chunks(doomed)
         out["rolled_back"] += 1
         seal(base)
@@ -492,6 +615,7 @@ class FsckReport:
     missing_parents: int = 0
     missing_chunks: int = 0     # referenced by a manifest, absent in store
     dangling_chunks: int = 0    # stored, referenced by nothing
+    refs_drift: int = 0         # refcount doc disagrees with commit walk
     tombstones: int = 0         # purgeable delete_branch markers (warning)
     details: List[str] = field(default_factory=list)
 
@@ -502,7 +626,8 @@ class FsckReport:
     @property
     def problems(self) -> int:
         return (self.unsealed_txns + self.torn_head + self.missing_parents
-                + self.missing_chunks + self.dangling_chunks)
+                + self.missing_chunks + self.dangling_chunks
+                + self.refs_drift)
 
     @property
     def clean(self) -> bool:
@@ -513,8 +638,15 @@ def fsck(store: ChunkStore) -> FsckReport:
     """Check every commit-engine invariant over the raw store (no graph
     construction, so the un-recovered state is inspectable): journals all
     sealed, HEAD resolvable, parents present, every referenced chunk
-    stored, no unreferenced chunks.  Tombstones are reported but are not
-    problems — ``gc`` purges them."""
+    stored, no unreferenced chunks, refcount doc in agreement with the
+    commit walk.  Tombstones are reported but are not problems — ``gc``
+    purges them.
+
+    Graph invariants (HEAD, parents, journals, refcounts) are checked for
+    the namespace ``store`` is scoped to; the *dangling* check is
+    necessarily global — chunks are shared, so "referenced by nothing"
+    means by no namespace's commits and no namespace's open journal.
+    Use :func:`fsck_all` to audit every namespace of a shared store."""
     rep = FsckReport()
     seen = set()
     for name in store.list_meta(TXN_PREFIX):
@@ -549,11 +681,27 @@ def fsck(store: ChunkStore) -> FsckReport:
             rep.missing_parents += 1
             rep.note(f"{cid}: parent {parent} missing")
         referenced.update(manifest_chunk_keys(doc.get("manifests", {})))
+    refs_doc = store.get_meta(REFS_DOC)
+    if refs_doc is not None:
+        counted = {k for k, cn in refs_doc.get("counts", {}).items()
+                   if cn[0] > 0}
+        for k in sorted(counted ^ referenced):
+            rep.refs_drift += 1
+            rep.note(f"refcount drift: {k} "
+                     f"({'counted but unreferenced' if k in counted else 'referenced but uncounted'})")
     present = set(store.chunk_sizes(list(referenced)))
     for k in sorted(referenced - present):
         rep.missing_chunks += 1
         rep.note(f"missing chunk {k}")
-    for k in sorted(set(store.list_chunk_keys()) - referenced):
+    live = global_live_chunks(store, use_refs=False)
+    for k in sorted(set(store.list_chunk_keys()) - live):
         rep.dangling_chunks += 1
         rep.note(f"dangling chunk {k}")
     return rep
+
+
+def fsck_all(store: ChunkStore) -> Dict[str, FsckReport]:
+    """Audit every namespace of a shared store — the root graph plus each
+    ``tenant/<id>/`` — keyed by tenant id ('' for root).  A store is fully
+    healthy iff every report is clean."""
+    return {tid: fsck(view) for tid, view in namespace_views(store)}

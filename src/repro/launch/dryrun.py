@@ -252,16 +252,16 @@ def run_cell(arch: str, shape: str, mesh_kind: str, *,
 
     mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
     n_dev = int(np.prod(mesh.devices.shape))
-    t0 = time.time()
+    t0 = time.monotonic()
     try:
         from repro.sharding import context as shctx
         with mesh:
             cell = build_cell(arch, shape, mesh, rules_opts=rules_opts)
             with shctx.moe_weight_gather(cell["rules"]):
                 lowered = cell["jfn"].lower(*cell["args"])
-            t_lower = time.time() - t0
+            t_lower = time.monotonic() - t0
             compiled = lowered.compile()
-            t_compile = time.time() - t0 - t_lower
+            t_compile = time.monotonic() - t0 - t_lower
 
             cost = {}
             try:
@@ -416,11 +416,11 @@ def main() -> None:
 
     failures = 0
     for arch, shape, mk in todo:
-        t0 = time.time()
+        t0 = time.monotonic()
         if args.calibrate:
             cal = calibrate_cell(arch, shape, mk, out_dir=args.out,
                                  force=args.force)
-            dt = time.time() - t0
+            dt = time.monotonic() - t0
             if cal is None:
                 print(f"[n/a  ] {arch:24s} {shape:12s} {mk:6s}", flush=True)
             elif "error" in cal:
@@ -433,7 +433,7 @@ def main() -> None:
                       f"cal_coll={cal['coll_total']:.3e}B", flush=True)
             continue
         rec = run_cell(arch, shape, mk, out_dir=args.out, force=args.force)
-        dt = time.time() - t0
+        dt = time.monotonic() - t0
         status = rec["status"]
         extra = ""
         if status == "ok":

@@ -8,6 +8,10 @@
     python -m repro.launch.kishu_cli --store ... gc
     python -m repro.launch.kishu_cli --store ... fsck
     python -m repro.launch.kishu_cli --store ... recover
+    python -m repro.launch.kishu_cli --store ... lease [--release NAME]
+    python -m repro.launch.kishu_cli --store ... tenants
+    python -m repro.launch.kishu_cli --store ... kishud start|stop|status \
+        --socket /tmp/kishud.sock [--detach]
     python -m repro.launch.kishu_cli --store fabric://... topology
     python -m repro.launch.kishu_cli --store fabric://... scrub [--repair]
     python -m repro.launch.kishu_cli --store fabric://... rebalance
@@ -40,8 +44,10 @@ import sys
 from typing import Optional
 
 from repro.core import fabric, parallel, txn
-from repro.core.chunkstore import chunk_key, open_store
-from repro.core.graph import CheckpointGraph, parse_key
+from repro.core.chunkstore import (NamespacedStore, chunk_key, open_store,
+                                   tenant_ids)
+from repro.core.graph import REFS_DOC, CheckpointGraph, parse_key
+from repro.core.lease import LEASE_PREFIX, lease_status
 
 
 def cmd_log(graph: CheckpointGraph, args) -> int:
@@ -169,8 +175,10 @@ def cmd_verify(store, graph: CheckpointGraph, args) -> int:
 def cmd_gc(store, graph: CheckpointGraph, args) -> int:
     # session-less GC: the mark set is shared with KishuSession.gc(); chunk
     # enumeration and the delete sweep are backend-native batched ops
-    # (works on sqlite:// stores and whole fabrics alike)
-    live = graph.live_chunk_keys()
+    # (works on sqlite:// stores and whole fabrics alike).  Chunks are
+    # shared across tenant namespaces, so the mark set unions every
+    # namespace's references and any unsealed journal's chunks.
+    live = graph.live_chunk_keys() | txn.global_live_chunks(store)
     dead = [k for k in store.list_chunk_keys() if k not in live]
     if not args.dry_run:
         store.delete_chunks(dead)
@@ -212,6 +220,90 @@ def cmd_recover(store, args) -> int:
           f"{out['rolled_back']} rolled back, "
           f"{out['chunks_dropped']} orphan chunks dropped")
     return 0
+
+
+def cmd_lease(store, args) -> int:
+    """Show writer leases (this namespace); ``--release NAME`` drops one —
+    an operator override for a provably dead holder.  Session code never
+    needs it: contenders steal automatically after an observed TTL."""
+    if args.release:
+        name = LEASE_PREFIX + args.release
+        if store.get_meta(name) is None:
+            print(f"no such lease: {args.release}", file=sys.stderr)
+            return 1
+        store.delete_meta(name)
+        print(f"lease {args.release} released")
+        return 0
+    leases = lease_status(store)
+    if not leases:
+        print("no leases held")
+        return 0
+    for rec in leases:
+        print(f"{rec['name']:8s} owner={rec['owner']} "
+              f"token={rec['token']} ttl={rec['ttl_s']}s "
+              f"age~{rec['age_hint_s']}s pid={rec['pid']} "
+              f"host={rec['host']}")
+    return 0
+
+
+def cmd_tenants(store, args) -> int:
+    """Per-tenant usage on a shared store: commits, referenced bytes (from
+    each namespace's refcount ledger), and the namespace's writer lease."""
+    rows = [("", store)] + [(tid, NamespacedStore(store, tid))
+                            for tid in tenant_ids(store)]
+    print(f"{'tenant':16s} {'commits':>7s} {'ref_bytes':>12s} "
+          f"{'head':8s} lease")
+    for tid, view in rows:
+        n_commits = sum(1 for name in view.list_meta("commit/")
+                        if not (view.get_meta(name) or {}).get("deleted"))
+        if tid == "" and n_commits == 0:
+            continue                     # bare root namespace: skip noise
+        refs = (view.get_meta(REFS_DOC) or {}).get("counts", {})
+        ref_bytes = sum(cn[1] for cn in refs.values() if cn[0] > 0)
+        head = (view.get_meta("HEAD") or {}).get("head") or "-"
+        leases = lease_status(view)
+        owner = leases[0]["owner"] if leases else "-"
+        print(f"{tid or '<root>':16s} {n_commits:7d} {ref_bytes:12,d} "
+              f"{head:8s} {owner}")
+    return 0
+
+
+def cmd_kishud(store_uri: str, args) -> int:
+    from repro.launch import kishud as kishud_mod
+    if args.action == "start":
+        if args.detach:
+            import subprocess
+            proc = subprocess.Popen(
+                [sys.executable, "-m", "repro.launch.kishud",
+                 "--store", store_uri, "--socket", args.socket,
+                 "--workers", str(args.workers),
+                 "--lease-ttl", str(args.lease_ttl)],
+                stdout=subprocess.DEVNULL, stderr=subprocess.DEVNULL,
+                start_new_session=True)
+            # wait for the control socket to answer before declaring success
+            import time as _time
+            for _ in range(100):
+                try:
+                    if kishud_mod.control(args.socket, "ping").get("ok"):
+                        print(f"kishud: started (pid {proc.pid}, "
+                              f"socket {args.socket})")
+                        return 0
+                except OSError:
+                    _time.sleep(0.05)
+            print("kishud: did not come up", file=sys.stderr)
+            return 1
+        return kishud_mod.main(["--store", store_uri,
+                                "--socket", args.socket,
+                                "--workers", str(args.workers),
+                                "--lease-ttl", str(args.lease_ttl)])
+    try:
+        resp = kishud_mod.control(args.socket, args.action)
+    except OSError as e:
+        print(f"kishud: no daemon on {args.socket} ({e})", file=sys.stderr)
+        return 1
+    print(resp if args.action != "status"
+          else "\n".join(f"{k:18s} {v}" for k, v in resp.items()))
+    return 0 if resp.get("ok") else 1
 
 
 def cmd_topology(store, args) -> int:
@@ -261,6 +353,17 @@ def main(argv: Optional[list] = None) -> int:
     p.add_argument("--limit", type=int, default=20,
                    help="max per-problem detail lines to print")
     sub.add_parser("recover")
+    p = sub.add_parser("lease")
+    p.add_argument("--release", metavar="NAME",
+                   help="force-drop a lease (operator override)")
+    sub.add_parser("tenants")
+    p = sub.add_parser("kishud")
+    p.add_argument("action", choices=["start", "stop", "status", "ping"])
+    p.add_argument("--socket", default="/tmp/kishud.sock")
+    p.add_argument("--detach", action="store_true",
+                   help="start: run the daemon in its own process")
+    p.add_argument("--workers", type=int, default=4)
+    p.add_argument("--lease-ttl", type=float, default=10.0)
     sub.add_parser("topology")
     p = sub.add_parser("scrub")
     p.add_argument("--repair", action="store_true")
@@ -270,6 +373,10 @@ def main(argv: Optional[list] = None) -> int:
     sub.add_parser("rebalance")
     args = ap.parse_args(argv)
 
+    # kishud verbs talk to the daemon (or spawn it) — the daemon owns the
+    # store; opening it here too would be a second uncoordinated opener
+    if args.cmd == "kishud":
+        return cmd_kishud(args.store, args)
     store = open_store(args.store)
     # store-level verbs run BEFORE any graph construction: fsck must see
     # the raw, un-recovered state, and recover applies it explicitly
@@ -277,6 +384,10 @@ def main(argv: Optional[list] = None) -> int:
         return cmd_fsck(store, args)
     if args.cmd == "recover":
         return cmd_recover(store, args)
+    if args.cmd == "lease":
+        return cmd_lease(store, args)
+    if args.cmd == "tenants":
+        return cmd_tenants(store, args)
     # fleet verbs operate on the store itself — no graph required
     if args.cmd == "topology":
         return cmd_topology(store, args)

@@ -62,12 +62,12 @@ def main() -> None:
     prev_loss = float("inf")
     good_commit = sess.kishu.head
     for phase in range(n_phases):
-        t0 = time.time()
+        t0 = time.monotonic()
         cid = sess.train(args.phase_steps)
         loss = sess.ns.get("metrics/last_loss", float("nan"))
         rs = sess.kishu.last_run
         print(f"phase {phase:3d} [{cid}] loss={loss:.4f} "
-              f"({args.phase_steps} steps, {time.time()-t0:.1f}s; "
+              f"({args.phase_steps} steps, {time.monotonic()-t0:.1f}s; "
               f"ckpt {rs.write.bytes_written/1e6:.2f}MB in {rs.write_s*1e3:.0f}ms, "
               f"detect {rs.detect_s*1e3:.0f}ms)", flush=True)
         if loss > prev_loss * args.spike_rollback:
