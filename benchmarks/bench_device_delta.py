@@ -1,0 +1,200 @@
+"""Fused on-device delta pipeline: device→host traffic vs dirty fraction.
+
+The workload is jax device arrays mutated in-place (``.at[].set``) so that
+~``dirty_frac`` of each co-variable's chunks change per cell.  ``mode``:
+
+  device — ``KISHU_DEVICE_DELTA=1``: detection + extraction run as the
+           fused delta_pack pass (Pallas on TPU, jnp ref elsewhere); only
+           hash pairs, dirty flags and *compacted dirty rows* cross the
+           device→host boundary (WriteStats.bytes_dev2host).
+  host   — ``KISHU_DEVICE_DELTA=0 KISHU_DEVICE_HASH=0``: the pre-fusion
+           path; detection hashes the whole array host-side, so traffic
+           equals the full array size every commit.
+
+Every configuration is verified bit-identical against the host path (same
+restored states AND the same content-addressed chunk keys), and the
+10%-dirty device rows must show traffic ratio ≤ 0.15 of full-array size —
+the acceptance bar ``run.py --smoke-device`` asserts in CI.  Rows feed
+``BENCH_device_delta.json``; ``benchmarks/roofline.py`` turns the detection
+wall times into an achieved-vs-peak HBM bandwidth roofline row.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+from typing import List, Optional
+
+from repro.configs.xla_flags import apply_xla_tuning
+
+apply_xla_tuning()      # opt-in ($KISHU_XLA_TUNING=1), no-op on CPU
+
+MODES = ("host", "device")
+DIRTY_FRACS = (0.01, 0.10, 0.50)
+
+
+def _make_store(backend: str, tmp: str, tag: str):
+    from repro.core import MemoryStore
+    from repro.core.chunkstore import DirectoryStore, SQLiteStore
+    if backend == "memory":
+        return MemoryStore()
+    if backend == "dir":
+        return DirectoryStore(os.path.join(tmp, f"dir_{tag}"))
+    return SQLiteStore(os.path.join(tmp, f"cas_{tag}.db"))
+
+
+def _run_one(backend: str, mode: str, dirty_frac: float, tmp: str, *,
+             n_covs: int, elems: int, chunk_bytes: int, repeats: int):
+    """One (backend, mode, dirty_frac) cell: returns (row, states, keys)."""
+    import time
+
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import KishuSession
+
+    env = {"device": ("1", "1"), "host": ("0", "0")}[mode]
+    os.environ["KISHU_DEVICE_DELTA"] = env[0]
+    os.environ["KISHU_DEVICE_HASH"] = env[1]
+
+    elem_bytes = 4
+    chunks_per_cov = -(-elems * elem_bytes // chunk_bytes)
+    dirty_chunks = max(1, int(round(chunks_per_cov * dirty_frac)))
+    chunk_elems = chunk_bytes // elem_bytes
+    touch = np.arange(dirty_chunks, dtype=np.int64) * chunk_elems
+
+    tag = f"{backend}_{mode}_{dirty_frac:g}"
+    store = _make_store(backend, tmp, tag)
+    sess = KishuSession(store, chunk_bytes=chunk_bytes, cache_bytes=0)
+
+    def init(ns, seed):
+        for i in range(n_covs):
+            ns[f"v{i:02d}"] = (jnp.arange(elems, dtype=jnp.float32)
+                               * (seed + i))
+
+    def mutate(ns, seed):
+        vals = jnp.full((dirty_chunks,), float(seed), jnp.float32)
+        for i in range(n_covs):
+            ns[f"v{i:02d}"] = ns[f"v{i:02d}"].at[touch].set(vals + i)
+
+    sess.register("init", init)
+    sess.register("mutate", mutate)
+    sess.init_state({})
+    sess.run("init", seed=1)
+
+    d2h = serialized = logical = packed = fallbacks = 0
+    detect_s = write_s = 0.0
+    commits = []
+    for r in range(repeats):
+        commits.append(sess.run("mutate", seed=100 + r))
+        run, w = sess.last_run, sess.last_run.write
+        detect_s += run.detect_s
+        write_s += run.write_s
+        d2h += w.bytes_dev2host
+        serialized += w.bytes_serialized
+        logical += w.bytes_logical
+        packed += w.covs_packed
+        fallbacks += w.kernel_fallbacks
+
+    # restored states + the content-addressed chunk keys are the
+    # bit-identity witnesses compared across modes
+    states = {}
+    for cid in commits:
+        t0 = time.perf_counter()
+        sess.checkout(cid)
+        states[len(states)] = {n: np.asarray(sess.ns[n]).tobytes()
+                               for n in sess.ns.names()}
+    keys = sorted(store.list_chunk_keys())
+    sess.close()
+
+    # host mode moves the full array device→host per detection pass
+    traffic = d2h if mode == "device" else logical
+    row = {
+        "bench": "device_delta", "backend": backend, "mode": mode,
+        "dirty_frac": dirty_frac,
+        "bytes_dev2host": traffic,
+        "bytes_logical": logical,
+        "traffic_ratio": round(traffic / logical, 4) if logical else None,
+        "bytes_serialized": serialized,
+        "covs_packed": packed,
+        "kernel_fallbacks": fallbacks,
+        "detect_s": round(detect_s, 5),
+        "write_s": round(write_s, 5),
+    }
+    return row, states, keys
+
+
+def run(n_covs: int = 2, elems: int = 1 << 16, chunk_bytes: int = 1 << 12,
+        repeats: int = 3, backends=("memory", "sqlite"),
+        dirty_fracs=DIRTY_FRACS) -> List[dict]:
+    saved = {k: os.environ.get(k)
+             for k in ("KISHU_DEVICE_DELTA", "KISHU_DEVICE_HASH")}
+    rows: List[dict] = []
+    tmp = tempfile.mkdtemp(prefix="kishu_devdelta_")
+    try:
+        for backend in backends:
+            for frac in dirty_fracs:
+                per_mode = {}
+                for mode in MODES:
+                    row, states, keys = _run_one(
+                        backend, mode, frac, tmp, n_covs=n_covs,
+                        elems=elems, chunk_bytes=chunk_bytes,
+                        repeats=repeats)
+                    per_mode[mode] = (row, states, keys)
+                h_row, h_states, h_keys = per_mode["host"]
+                d_row, d_states, d_keys = per_mode["device"]
+                identical = (h_states == d_states and h_keys == d_keys)
+                for row in (h_row, d_row):
+                    row["identical"] = identical
+                    rows.append(row)
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+        for k, v in saved.items():       # never leak the forced env
+            if v is None:
+                os.environ.pop(k, None)
+            else:
+                os.environ[k] = v
+    return rows
+
+
+def smoke() -> List[dict]:
+    """CI gate (CPU interpreter path): the fused pipeline must engage, stay
+    bit-identical to the host path on every backend, and on the 10%-dirty
+    workload move ≤ 0.15 of full-array size device→host."""
+    rows = run(n_covs=2, elems=1 << 14, chunk_bytes=1 << 12, repeats=2)
+    assert all(r["identical"] for r in rows), \
+        "device path not bit-identical to host path"
+    dev = [r for r in rows if r["mode"] == "device"]
+    assert dev and all(r["covs_packed"] > 0 for r in dev), \
+        "fused delta pack never engaged on the device path"
+    for r in dev:
+        if r["dirty_frac"] <= 0.10:
+            assert r["traffic_ratio"] is not None \
+                and r["traffic_ratio"] <= 0.15, (
+                    f"{r['backend']}@{r['dirty_frac']}: device→host ratio "
+                    f"{r['traffic_ratio']} > 0.15")
+
+    # pallas-kernel parity on the interpreter (the TPU kernel itself, not
+    # just the jnp ref the auto probe lands on under CPU)
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import hashing
+    from repro.kernels.delta_pack.ops import delta_pack
+
+    rng = np.random.default_rng(7)
+    a = rng.integers(0, 255, 4096 * 3 + 5, dtype=np.uint8)
+    prev = hashing.chunk_hashes_np(a.tobytes(), 1024)
+    b = a.copy()
+    b[2048] ^= 0xFF
+    pack = delta_pack(jnp.asarray(b), prev, 1024, backend="pallas",
+                      interpret=True)
+    assert np.array_equal(pack.hashes,
+                          hashing.chunk_hashes_np(b.tobytes(), 1024))
+    assert list(pack.dirty) == [2]
+    (ci, data), = list(pack.read_chunks())
+    assert data == b[2048:3072].tobytes()
+    rows.append({"bench": "device_delta", "backend": "-",
+                 "mode": "pallas_interpret", "dirty_frac": None,
+                 "identical": True, "covs_packed": 1})
+    return rows

@@ -106,6 +106,43 @@ def run(art_dir: str = ART_DIR, mesh: str = "single",
     return rows
 
 
+DEVICE_DELTA_ART = os.path.join(os.path.dirname(__file__), "..",
+                                "BENCH_device_delta.json")
+
+
+def detection_rows(path: str = DEVICE_DELTA_ART) -> List[dict]:
+    """Checkpoint-detection roofline: achieved vs peak HBM bandwidth.
+
+    The fused delta_pack pass reads every byte of a co-variable exactly once
+    (hash + diff + compact in one stream), so detection is memory-bound and
+    its roofline is ``bytes_logical / detect_s`` against ``HBM_BW``.  Reads
+    the device rows of BENCH_device_delta.json (written by
+    bench_device_delta / ``run.py --smoke-device``); returns [] when the
+    artifact doesn't exist yet.  On a CPU host the fraction is tiny — the
+    row still pins down how far the current substrate is from the target.
+    """
+    if not os.path.exists(path):
+        return []
+    with open(path) as f:
+        doc = json.load(f)
+    out = []
+    for r in doc.get("rows", []):
+        if r.get("mode") != "device" or not r.get("detect_s"):
+            continue
+        achieved = r["bytes_logical"] / r["detect_s"]
+        out.append({
+            "bench": "roofline_detection",
+            "backend": r["backend"], "dirty_frac": r["dirty_frac"],
+            "bytes_logical": r["bytes_logical"],
+            "detect_s": r["detect_s"],
+            "achieved_GBps": round(achieved / 1e9, 3),
+            "peak_GBps": round(HBM_BW / 1e9, 1),
+            "hbm_frac": round(achieved / HBM_BW, 6),
+            "bound": "memory",       # one HBM read stream by construction
+        })
+    return out
+
+
 def markdown_table(rows: List[dict]) -> str:
     hdr = ("| arch | shape | compute s | memory s | collective s | dominant "
            "| useful | roofline frac | arg GiB/dev |\n"

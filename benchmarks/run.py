@@ -113,6 +113,20 @@ def bench_multi(quick: bool):
     return rows
 
 
+def bench_device_delta(quick: bool):
+    """Fused on-device delta pipeline: device→host traffic vs dirty
+    fraction {1,10,50}%, device (fused pack) vs host path, bit-identity
+    across backends.  Writes BENCH_device_delta.json."""
+    from benchmarks import bench_device_delta as b
+    if quick:
+        rows = b.run(n_covs=2, elems=1 << 14, chunk_bytes=1 << 12,
+                     repeats=2, backends=("memory",))
+    else:
+        rows = b.run()
+    _write_bench_json("BENCH_device_delta.json", rows)
+    return rows
+
+
 def bench_tracking(quick: bool):
     """Table 6 / Fig 17 (tracking overhead)."""
     from benchmarks import bench_tracking as b
@@ -149,6 +163,7 @@ def bench_roofline(quick: bool):
     """Deliverable (g): roofline terms per (arch x shape) from the dry-run."""
     from benchmarks import roofline
     rows = []
+    rows += roofline.detection_rows()   # checkpoint-detection roofline
     for mesh in ("single", "multi"):
         for r in roofline.run(mesh=mesh):
             if r.get("status") == "ok":
@@ -173,6 +188,7 @@ ALL = {
     "ckpt": bench_ckpt,
     "ckpt_io": bench_ckpt_io,
     "delta": bench_delta,
+    "device_delta": bench_device_delta,
     "fabric": bench_fabric,
     "txn": bench_txn,
     "multi": bench_multi,
@@ -191,6 +207,10 @@ def main() -> None:
     ap.add_argument("--smoke", action="store_true",
                     help="fast CI gate: delta-pipeline bytes-moved "
                          "assertions + BENCH_*.json artifacts")
+    ap.add_argument("--smoke-device", action="store_true",
+                    help="fast CI gate: fused on-device delta pipeline — "
+                         "traffic-ratio + bit-identity assertions on the "
+                         "CPU interpreter path + BENCH_device_delta.json")
     ap.add_argument("--smoke-fabric", action="store_true",
                     help="fast CI gate: storage-fabric scatter-gather "
                          "speedup + replica-loss restore assertions + "
@@ -210,6 +230,13 @@ def main() -> None:
         _print_rows(rows)
         _emit_delta_artifacts(rows)
         print("# delta smoke OK", flush=True)
+        return
+    if args.smoke_device:
+        from benchmarks import bench_device_delta as b
+        rows = b.smoke()        # raises AssertionError on regression
+        _print_rows(rows)
+        _write_bench_json("BENCH_device_delta.json", rows)
+        print("# device delta smoke OK", flush=True)
         return
     if args.smoke_fabric:
         from benchmarks import bench_fabric as b

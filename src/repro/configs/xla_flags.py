@@ -1,0 +1,89 @@
+"""XLA tuning flags, applied the safe way.
+
+Replaces the ad-hoc ``os.environ["XLA_FLAGS"] = ...`` writes scattered
+through launch/benchmark scripts with two invariants:
+
+  - **merge, never clobber** — flags the user already set in ``XLA_FLAGS``
+    win; we only append flags whose name isn't present yet
+    (:func:`merge_xla_flags`), and
+  - **opt-in, no-op on CPU** — :func:`apply_xla_tuning` does nothing unless
+    ``KISHU_XLA_TUNING=1`` *and* the target platform is an accelerator.
+    The latency-hiding/async-stream flags below only exist on the GPU
+    backend; exporting them on CPU makes XLA warn-or-die at init.
+
+Must run **before** jax initializes its backends (XLA reads the env var at
+backend init, once).  This module therefore imports nothing from jax; the
+platform is resolved from the standard ``JAX_PLATFORMS``/
+``JAX_PLATFORM_NAME`` env hints or an explicit argument.
+"""
+from __future__ import annotations
+
+import os
+from typing import Optional, Sequence
+
+# Latency-hiding / async-stream flags (the bayespec recipe; see
+# https://jax.readthedocs.io/en/latest/gpu_performance_tips.html).  The
+# scheduler + async-collective pair is what lets the checkpoint pipeline's
+# device→host DMA overlap compute and backend puts.
+GPU_TUNING_FLAGS = (
+    "--xla_gpu_enable_triton_softmax_fusion=true",
+    "--xla_gpu_triton_gemm_any=True",
+    "--xla_gpu_enable_async_collectives=true",
+    "--xla_gpu_enable_latency_hiding_scheduler=true",
+    "--xla_gpu_enable_highest_priority_async_stream=true",
+)
+
+
+def _flag_name(flag: str) -> str:
+    return flag.split("=", 1)[0]
+
+
+def merge_xla_flags(flags: Sequence[str], env=None) -> str:
+    """Append ``flags`` to ``XLA_FLAGS`` without overriding any flag the
+    user (or an earlier caller) already set.  Returns the resulting value."""
+    env = os.environ if env is None else env
+    current = env.get("XLA_FLAGS", "").split()
+    have = {_flag_name(f) for f in current}
+    added = [f for f in flags if _flag_name(f) not in have]
+    merged = " ".join(current + added)
+    if merged:
+        env["XLA_FLAGS"] = merged
+    return merged
+
+
+def resolve_platform(platform: Optional[str] = None, env=None) -> str:
+    """Best-effort platform without touching jax (which would lock the
+    backend before the flags land): explicit argument, then the standard
+    jax env hints, else "cpu" (the conservative no-op default)."""
+    env = os.environ if env is None else env
+    if platform:
+        return platform.lower()
+    for var in ("JAX_PLATFORMS", "JAX_PLATFORM_NAME"):
+        val = env.get(var, "").strip().lower()
+        if val:
+            return val.split(",")[0]
+    return "cpu"
+
+
+def apply_xla_tuning(platform: Optional[str] = None, env=None) -> str:
+    """Opt-in XLA tuning: merge the accelerator flag block into
+    ``XLA_FLAGS`` when ``KISHU_XLA_TUNING=1`` and the platform is a GPU.
+
+    No-op (returns "") on CPU/TPU or without the opt-in, so importing a
+    benchmark never changes a user's XLA configuration behind their back.
+    Call before anything initializes jax.
+    """
+    env = os.environ if env is None else env
+    if env.get("KISHU_XLA_TUNING", "").strip() != "1":
+        return ""
+    if resolve_platform(platform, env) != "gpu":
+        return ""
+    return merge_xla_flags(GPU_TUNING_FLAGS, env)
+
+
+def force_host_device_count(n: int, env=None) -> str:
+    """Merge ``--xla_force_host_platform_device_count=n`` (dry-run drivers
+    simulating multi-pod meshes on one host).  A user-provided count in
+    ``XLA_FLAGS`` wins; call before jax initializes."""
+    return merge_xla_flags(
+        [f"--xla_force_host_platform_device_count={n}"], env)

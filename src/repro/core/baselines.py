@@ -212,7 +212,7 @@ class DetReplaySession(KishuSession):
         # forcing checkout to replay this command.
         saved_writer_write = self.writer.write_delta
 
-        def _skip_write(delta, ns, prev_of):
+        def _skip_write(delta, ns, prev_of, packs=None):
             from repro.core.checkpoint import WriteStats
             from repro.core.graph import key_str as ks
             manifests = {}

@@ -44,6 +44,7 @@ class CheckoutStats:
     bytes_logical: int = 0          # logical size of restored co-variables
     chunks_patched: int = 0         # dirty chunks fetched + patched in
     chunks_inplace: int = 0         # clean chunks reused from the live buffer
+    kernel_fallbacks: int = 0       # device-kernel → host degradations
     wall_s: float = 0.0
     diff_s: float = 0.0
 
@@ -505,6 +506,7 @@ class StateLoader:
         Returns (updated record map, stats)."""
         stats = CheckoutStats()
         t0 = time.perf_counter()
+        fb0 = delta_mod.kernel_fallbacks()
         cur = self.graph.head
         td = time.perf_counter()
         plan: CheckoutPlan = self.graph.diff(cur, target)
@@ -557,6 +559,7 @@ class StateLoader:
         stats.covs_loaded = len(loaded)
         stats.covs_deleted = len(plan.to_delete)
         self.graph.set_head(target)
+        stats.kernel_fallbacks = delta_mod.kernel_fallbacks() - fb0
         stats.wall_s = time.perf_counter() - t0
         return new_records, stats
 

@@ -44,6 +44,9 @@ class WriteStats:
     chunks_reused: int = 0          # skipped via detection-hash delta
     chunks_dedup: int = 0           # skipped via CAS hit
     covs_delta: int = 0             # covs written via the dirty-range path
+    covs_packed: int = 0            # subset served by the fused device pack
+    bytes_dev2host: int = 0         # device→host bytes the pack(s) moved
+    kernel_fallbacks: int = 0       # device-kernel → host degradations
     unserializable: int = 0
     wall_s: float = 0.0
 
@@ -51,9 +54,26 @@ class WriteStats:
 _hashes_hex = hashing.hashes_hex
 
 
+def _pack_usable(pack, det_hex: List[str], dirty_set, n: int,
+                 chunk_bytes: int, n_chunks: int) -> bool:
+    """The fused device pack may serve this delta only when it describes
+    exactly this base at exactly this chunking AND its dirty set covers
+    every chunk the manifest compare wants rewritten.  The pack's dirty set
+    is computed against the previous *record* hashes; the manifest compare
+    runs against the previous *manifest* — normally identical, but a
+    mismatch (recovered graph, size drift forcing extra rewrites) must fall
+    back to the device-sliced reader rather than write stale rows."""
+    if pack is None or pack.chunk_bytes != chunk_bytes \
+            or pack.nbytes != n or pack.n_chunks != n_chunks:
+        return False
+    if hashing.hashes_hex(pack.hashes) != det_hex:
+        return False
+    return dirty_set <= pack.dirty_set
+
+
 def _try_delta_manifest(base, det_hex: List[str], prev_manifest,
                         chunk_bytes: int, stats: WriteStats,
-                        put, has, members) -> Optional[dict]:
+                        put, has, members, pack=None) -> Optional[dict]:
     """Dirty-range fast path: when the previous manifest matches this base
     structurally, compare detection hashes *first* and serialize only the
     dirty byte ranges — the full blob is never built and device→host
@@ -83,9 +103,13 @@ def _try_delta_manifest(base, det_hex: List[str], prev_manifest,
     dirty = sorted(dirty_set)
     if len(dirty) == n_chunks:
         return None                  # fully diverged: full path, same cost
-    reader = delta_mod.range_reader(base, chunk_bytes)
-    if reader is None:
-        return None
+    use_pack = _pack_usable(pack, det_hex, dirty_set, n, chunk_bytes,
+                            n_chunks)
+    reader = None
+    if not use_pack:
+        reader = delta_mod.range_reader(base, chunk_bytes)
+        if reader is None:
+            return None
 
     stats.bytes_logical += n
     stats.covs_delta += 1
@@ -95,22 +119,36 @@ def _try_delta_manifest(base, det_hex: List[str], prev_manifest,
             chunks[i] = {"key": prev_chunks[i]["key"],
                          "n": prev_chunks[i]["n"]}
             stats.chunks_reused += 1
-    for start, stop in delta_mod.coalesce(dirty):
-        lo, hi = start * chunk_bytes, min(stop * chunk_bytes, n)
-        data = reader(lo, hi)
-        stats.bytes_serialized += len(data)
-        for i in range(start, stop):
-            clo = i * chunk_bytes - lo
-            chi = min((i + 1) * chunk_bytes, n) - lo
-            cdata = data[clo:chi]
-            ck = chunk_key(cdata)
-            if has(ck):
-                stats.chunks_dedup += 1
-            else:
-                put(ck, cdata)
-                stats.chunks_written += 1
-                stats.bytes_written += len(cdata)
-            chunks[i] = {"key": ck, "n": chi - clo}
+
+    def _store(i: int, cdata) -> None:
+        ck = chunk_key(cdata)
+        if has(ck):
+            stats.chunks_dedup += 1
+        else:
+            put(ck, cdata)
+            stats.chunks_written += 1
+            stats.bytes_written += len(cdata)
+        chunks[i] = {"key": ck, "n": len(cdata)}
+
+    if use_pack:
+        # fused device path: dirty chunks come out of the kernel's
+        # compacted buffer — the puts above enqueue into the (possibly
+        # async) writer while read_chunks keeps the *next* segment's
+        # device→host DMA in flight (DESIGN.md §15)
+        stats.covs_packed += 1
+        for i, cdata in pack.read_chunks(dirty):
+            stats.bytes_serialized += len(cdata)
+            _store(i, cdata)
+        stats.bytes_dev2host += pack.bytes_transferred
+    else:
+        for start, stop in delta_mod.coalesce(dirty):
+            lo, hi = start * chunk_bytes, min(stop * chunk_bytes, n)
+            data = reader(lo, hi)
+            stats.bytes_serialized += len(data)
+            for i in range(start, stop):
+                clo = i * chunk_bytes - lo
+                chi = min((i + 1) * chunk_bytes, n) - lo
+                _store(i, data[clo:chi])
     return {"members": members, "unserializable": False,
             "base": {"meta": meta, "nbytes": n, "chunks": chunks,
                      "det_hashes": det_hex}}
@@ -123,7 +161,8 @@ def build_manifest(store: ChunkStore, key: CovKey,
                    stats: WriteStats,
                    put: Callable[[str, bytes], None],
                    has: Optional[Callable[[str], bool]] = None,
-                   delta_ranges: bool = True) -> dict:
+                   delta_ranges: bool = True,
+                   packs: Optional[Dict[int, Any]] = None) -> dict:
     """Serialize one co-variable into a manifest + chunk puts.
 
     ``has`` is the CAS-dedup membership test; the writer passes a variant
@@ -150,7 +189,8 @@ def build_manifest(store: ChunkStore, key: CovKey,
     # transfer only the dirty ranges (bytes_serialized ~ dirty bytes)
     if delta_ranges:
         man = _try_delta_manifest(base, det_hex, prev_manifest, chunk_bytes,
-                                  stats, put, has, members)
+                                  stats, put, has, members,
+                                  pack=(packs or {}).get(id(base)))
         if man is not None:
             return man
 
@@ -347,7 +387,8 @@ class CheckpointWriter:
                 or self.store.has_chunk(ck))
 
     def write_delta(self, delta, ns,
-                    prev_manifest_of: Callable[[CovKey], Optional[dict]]
+                    prev_manifest_of: Callable[[CovKey], Optional[dict]],
+                    packs: Optional[Dict[int, Any]] = None
                     ) -> Tuple[Dict[str, dict], WriteStats]:
         t0 = time.perf_counter()
         stats = WriteStats()
@@ -356,7 +397,8 @@ class CheckpointWriter:
             man = build_manifest(self.store, key, records, ns,
                                  self.chunk_bytes, prev_manifest_of(key),
                                  stats, self._put, self._has,
-                                 delta_ranges=self.delta_ranges)
+                                 delta_ranges=self.delta_ranges,
+                                 packs=packs)
             manifests[key_str(key)] = man
         self._flush_batch()                  # sync mode: durable on return
         if self.async_write and self.write_deadline_s:

@@ -74,14 +74,33 @@ class RecordBuilder:
         self.hasher = hasher or hashing.chunk_hashes_np
         self.hash_calls = 0
         self.hashed_bytes = 0
+        # fused-path handoff (DESIGN.md §15): id(base) -> DeltaPack built
+        # during detection; the checkpoint writer reads the dirty chunks
+        # from the pack's compacted device buffer instead of re-slicing the
+        # array.  Cleared at the start of every detect_delta — ids are only
+        # stable while the bases live in the namespace.
+        self.packs: Dict[int, Any] = {}
 
-    def _hash_base(self, base: Any, cache: Dict[int, np.ndarray]) -> np.ndarray:
+    def _hash_base(self, base: Any, cache: Dict[int, np.ndarray],
+                   prev_hashes: Optional[np.ndarray] = None) -> np.ndarray:
         key = id(base)
         if key in cache:
             return cache[key]
         if self.hasher is hashing.chunk_hashes_np and not is_prng_key(base):
             import jax
             if isinstance(base, jax.Array):
+                from repro.core import delta as delta_mod
+                # fused path: one pass yields hashes AND the compacted
+                # dirty chunks (the writer consumes the pack; detection
+                # transfers 12 bytes/chunk instead of the buffer)
+                pack = delta_mod.device_delta_pack(base, prev_hashes,
+                                                   self.chunk_bytes)
+                if pack is not None:
+                    self.packs[key] = pack
+                    self.hash_calls += 1
+                    self.hashed_bytes += pack.nbytes
+                    cache[key] = pack.hashes
+                    return pack.hashes
                 # device arrays: hash on device (Pallas chunk_hash kernel,
                 # jnp fallback) so delta *detection* doesn't transfer the
                 # whole buffer host-side; None -> host path below
@@ -107,7 +126,8 @@ class RecordBuilder:
         return h
 
     def build(self, name: str, leaf: Any,
-              cache: Optional[Dict[int, np.ndarray]] = None) -> LeafRecord:
+              cache: Optional[Dict[int, np.ndarray]] = None,
+              prev: Optional[LeafRecord] = None) -> LeafRecord:
         cache = cache if cache is not None else {}
         if isinstance(leaf, OpaqueLeaf):
             return LeafRecord(name=name, kind="opaque", alias_id=id(leaf))
@@ -120,12 +140,17 @@ class RecordBuilder:
                 alias_id=id(leaf), base_hashes=self._hash_base(leaf, cache))
         if is_array_leaf(leaf):
             base = base_of(leaf)
+            # previous commit's hashes of this name (device arrays rebind
+            # every run, so identity can't key this — the name does) seed
+            # the fused hash+diff+compact pass
+            prev_hashes = prev.base_hashes \
+                if prev is not None and prev.kind == "array" else None
             return LeafRecord(
                 name=name, kind="array", dtype=str(np.dtype(leaf.dtype)),
                 shape=tuple(leaf.shape),
                 nbytes=int(np.dtype(leaf.dtype).itemsize * int(np.prod(leaf.shape, dtype=np.int64))),
                 alias_id=id(base), view=view_spec(leaf, base),
-                base_hashes=self._hash_base(base, cache))
+                base_hashes=self._hash_base(base, cache, prev_hashes))
         # small python object
         try:
             blob = pickle.dumps(leaf)
@@ -185,9 +210,11 @@ def detect_delta(prev_records: Dict[str, LeafRecord],
     # rebuild records for candidate names only
     new_records: Dict[str, LeafRecord] = {}
     hash_cache: Dict[int, np.ndarray] = {}
+    builder.packs.clear()           # packs are one-commit artifacts
     for name in sorted(candidate_names):
         if name in cur_names:
-            new_records[name] = builder.build(name, ns[name], hash_cache)
+            new_records[name] = builder.build(name, ns[name], hash_cache,
+                                              prev=prev_records.get(name))
 
     new_groups = group_covariables(new_records)
     delta.checked = len(new_groups)

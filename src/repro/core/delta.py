@@ -18,9 +18,38 @@ the dirty ranges cross the device→host boundary.
 """
 from __future__ import annotations
 
+import logging
+import os
 from typing import Any, Callable, List, Optional, Sequence, Tuple
 
 import numpy as np
+
+_log = logging.getLogger(__name__)
+
+# Device-kernel fallback observability: every silent degradation to a host
+# path bumps this counter (snapshotted into WriteStats/CheckoutStats per
+# operation) and the *first* one per session logs a warning — a silently
+# slow path must be visible without turning every commit into log spam.
+_kernel_fallbacks = 0
+_fallback_logged = False
+
+
+def note_kernel_fallback(where: str, err: Exception) -> None:
+    """Record one device-kernel → host-path degradation."""
+    global _kernel_fallbacks, _fallback_logged
+    _kernel_fallbacks += 1
+    if not _fallback_logged:
+        _fallback_logged = True
+        _log.warning(
+            "device kernel unavailable in %s (%s: %s); using the host path. "
+            "Logged once per session — see the kernel_fallbacks counter in "
+            "WriteStats/CheckoutStats for the running total.",
+            where, type(err).__name__, err)
+
+
+def kernel_fallbacks() -> int:
+    """Total device-kernel fallbacks this session (monotonic)."""
+    return _kernel_fallbacks
 
 
 def dirty_indices(prev_hex: Sequence[str], cur_hex: Sequence[str]) -> List[int]:
@@ -100,6 +129,51 @@ def range_reader(base: Any, chunk_bytes: int) -> Optional[Callable[[int, int], b
 
 
 # ---------------------------------------------------------------------------
+# fused on-device delta pack (writer side, DESIGN.md §15)
+# ---------------------------------------------------------------------------
+
+def device_delta_pack(base: Any, prev_hashes, chunk_bytes: int):
+    """One fused Pallas pass over a device array: detection hashes, dirty
+    indices, and a *compacted* dirty-chunk buffer still on device — only
+    dirty bytes ever cross device→host (``DeltaPack.read_chunks``).
+
+    Returns ``None`` whenever the fused path doesn't apply — host array,
+    PRNG key, non-power-of-two chunking, no/mismatched previous hashes, or
+    no working kernel backend — and the caller degrades one rung down the
+    ladder (``chunk_hashes_device`` → ``chunk_hashes_np`` + range_reader).
+    Only engaged off-CPU by default — on CPU interpret-mode dispatch loses
+    to NumPy — override with ``KISHU_DEVICE_DELTA=1/0``.
+    """
+    if prev_hashes is None or chunk_bytes % 4 \
+            or chunk_bytes & (chunk_bytes - 1):
+        return None
+    env = os.environ.get("KISHU_DEVICE_DELTA", "").strip()
+    if env == "0":
+        return None
+    import jax
+
+    from repro.core.serialize import is_prng_key
+
+    if env != "1" and jax.default_backend() == "cpu":
+        return None
+    if not isinstance(base, jax.Array) or is_prng_key(base):
+        return None
+    nbytes = int(base.size) * np.dtype(base.dtype).itemsize
+    if nbytes <= 0:
+        return None
+    n_chunks = -(-nbytes // chunk_bytes)
+    prev = np.asarray(prev_hashes, dtype=np.uint64).reshape(-1)
+    if prev.shape[0] != n_chunks:
+        return None                      # structure changed: no valid diff
+    try:
+        from repro.kernels.delta_pack.ops import delta_pack_auto
+        return delta_pack_auto(base, prev, chunk_bytes)
+    except Exception as e:  # noqa: BLE001 — no kernel backend: host path
+        note_kernel_fallback("device_delta_pack", e)
+        return None
+
+
+# ---------------------------------------------------------------------------
 # chunk patching (loader side)
 # ---------------------------------------------------------------------------
 
@@ -159,8 +233,8 @@ def exact_dirty_indices(a: Any, b: Any, chunk_bytes: int) -> List[int]:
         try:
             from repro.kernels.block_diff.ops import dirty_chunks
             return [int(i) for i in dirty_chunks(a, b, chunk_bytes)]
-        except Exception:  # noqa: BLE001 — kernel unavailable: host compare
-            pass
+        except Exception as e:  # noqa: BLE001 — kernel unavailable:
+            note_kernel_fallback("exact_dirty_indices", e)  # host compare
     ba = np.ascontiguousarray(np.asarray(a)).reshape(-1).view(np.uint8)
     bb = np.ascontiguousarray(np.asarray(b)).reshape(-1).view(np.uint8)
     if ba.size != bb.size:

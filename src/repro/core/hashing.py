@@ -154,6 +154,14 @@ def combine_u64(lanes) -> np.ndarray:
         | lanes[:, 1].astype(np.uint64)
 
 
+def split_u64(h) -> np.ndarray:
+    """uint64 [n] -> uint32 [n,2] lanes (inverse of :func:`combine_u64`) —
+    the previous-hash operand of the fused ``delta_pack`` kernel."""
+    h = np.asarray(h, dtype=np.uint64)
+    return np.stack([(h >> np.uint64(32)).astype(np.uint32),
+                     (h & np.uint64(0xFFFFFFFF)).astype(np.uint32)], axis=1)
+
+
 def words_view(buf: bytes | np.ndarray, chunk_bytes: int):
     """Pre-chunk a buffer for the jnp/pallas paths.
 

@@ -20,6 +20,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
 
+from repro.core import delta as delta_mod
 from repro.core import hashing
 from repro.core.checkpoint import CheckpointWriter, WriteStats
 from repro.core.checkout import CheckoutStats, StateLoader
@@ -66,6 +67,7 @@ class _RunPlan:
     deps: Dict[CovKey, str]
     stats: RunStats
     t_all: float
+    fb0: int = 0                     # kernel-fallback counter at plan start
 
 
 class KishuSession:
@@ -202,6 +204,7 @@ class KishuSession:
         fn = self.registry[name]
         stats = RunStats()
         t_all = time.perf_counter()
+        fb0 = delta_mod.kernel_fallbacks()
 
         self.tracked.reset()
         t0 = time.perf_counter()
@@ -227,7 +230,7 @@ class KishuSession:
             if ver is not None:
                 deps[key] = ver
         return _RunPlan(name=name, args=args, delta=delta, deps=deps,
-                        stats=stats, t_all=t_all)
+                        stats=stats, t_all=t_all, fb0=fb0)
 
     def _execute_commit(self, plan: "_RunPlan", message: str = "") -> str:
         """Stage 2: serialize the delta's dirty ranges into journaled chunk
@@ -237,8 +240,10 @@ class KishuSession:
         delta, stats = plan.delta, plan.stats
         t0 = time.perf_counter()
         manifests, wstats = self.writer.write_delta(
-            delta, self.ns, self._prev_manifest)
+            delta, self.ns, self._prev_manifest, packs=self.builder.packs)
         stats.write_s = time.perf_counter() - t0
+        # degradations anywhere in this run — detection (plan) or write
+        wstats.kernel_fallbacks = delta_mod.kernel_fallbacks() - plan.fb0
         stats.write = wstats
 
         if self.quota_bytes is not None:

@@ -1,0 +1,136 @@
+"""Pallas TPU kernel: the fused on-device delta pipeline.
+
+One pass over HBM per chunk does everything the checkpoint writer's
+detection+extraction hot path needs:
+
+  hash      — avalanche-mix + XOR-tree-reduce each (1, W) uint32 block into
+              the 2x32-bit detection hash pair (same math as ``chunk_hash``;
+              the spec lives in repro.core.hashing)
+  diff      — compare the pair against the *previous* commit's hash pair for
+              that chunk (prefetched alongside the data block)
+  compact   — dirty chunks are appended, in chunk order, to a compacted
+              output buffer at a running-counter position, so the caller
+              transfers ``count`` rows device→host instead of the whole array
+
+Grid: one program per chunk, executed sequentially per core (the TPU grid
+contract), which makes the SMEM running counter a legal cross-step
+accumulator — the standard Pallas compaction pattern.  Streams one (1, W)
+block in, writes the (1, 2) hash pair, a dirty flag, the chunk's compacted
+position (-1 when clean), and conditionally one (1, W) row of the compacted
+buffer: bandwidth-bound at ~1 read stream + dirty-fraction write stream.
+
+Outputs (in order):
+  hashes  uint32 [n_chunks, 2]   — detection hash pairs (lane 0 = high word)
+  dirty   int32  [n_chunks, 1]   — 1 iff the pair differs from ``prev``
+  pos     int32  [n_chunks, 1]   — row of the chunk in the compacted buffer,
+                                   -1 when clean
+  count   int32  [1, 1]          — total dirty chunks (valid rows of ``buf``)
+  buf     uint32 [n_chunks, W]   — compacted dirty chunks; rows past
+                                   ``count`` are unwritten garbage
+
+VMEM budget: the input block plus the *whole* compacted buffer are resident
+(4*W + 4*n_chunks*W bytes) — ops.py bounds n_chunks per call by segmenting,
+so a call never exceeds its VMEM budget regardless of array size.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.hashing import C1, C2, GOLDEN, SEEDS
+
+
+def _xor_tree(v: jax.Array) -> jax.Array:
+    """XOR-reduce v [1, W] -> scalar via an unrolled halving tree."""
+    length = v.shape[1]
+    while length > 1:
+        half = length // 2
+        v = v[:, :half] ^ v[:, half:length]
+        length = half
+    return v[0, 0]
+
+
+def _delta_pack_kernel(words_ref, prev_ref, nbytes_ref,
+                       hash_ref, dirty_ref, pos_ref, count_ref, buf_ref,
+                       cnt_ref):
+    i = pl.program_id(0)
+
+    @pl.when(i == 0)
+    def _():
+        cnt_ref[0] = 0                 # running compaction counter (SMEM
+                                       # scratch persists across grid steps)
+
+    w = words_ref[...]                                   # (1, W) uint32
+    wsize = w.shape[1]
+    idx = jax.lax.broadcasted_iota(jnp.uint32, (1, wsize), 1)
+    nbytes = nbytes_ref[0, 0].astype(jnp.uint32)
+    n_valid = (nbytes + 3) // 4          # padding words contribute zero
+    lanes = []
+    for lane, seed in enumerate(SEEDS):
+        m = (w ^ (idx * jnp.uint32(GOLDEN) + jnp.uint32(seed))) * jnp.uint32(C1)
+        m = m ^ (m >> 16)
+        m = m * jnp.uint32(C2)
+        m = m ^ (m >> 13)
+        m = jnp.where(idx < n_valid, m, jnp.uint32(0))
+        h = _xor_tree(m)
+        h = (h ^ nbytes) * jnp.uint32(C1)
+        h = h ^ (h >> 16)
+        hash_ref[0, lane] = h
+        lanes.append(h)
+
+    dirty = (lanes[0] != prev_ref[0, 0]) | (lanes[1] != prev_ref[0, 1])
+    d32 = dirty.astype(jnp.int32)
+    dirty_ref[0, 0] = d32
+    pos = cnt_ref[0]
+    pos_ref[0, 0] = jnp.where(dirty, pos, -1)
+
+    @pl.when(dirty)
+    def _():
+        # append this chunk's words at the next free compacted row; the
+        # block is already in VMEM from the hash read — no second HBM fetch
+        buf_ref[pl.ds(pos, 1), :] = w
+
+    cnt_ref[0] = pos + d32
+    count_ref[0, 0] = pos + d32        # last program leaves the total
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def delta_pack_pallas(words: jax.Array, prev: jax.Array, nbytes: jax.Array,
+                      *, interpret: bool = False):
+    """words: uint32 [n_chunks, W] (W power of two); prev: uint32
+    [n_chunks, 2] previous hash pairs; nbytes: int32 [n_chunks].
+
+    Returns (hashes [n,2] u32, dirty [n,1] i32, pos [n,1] i32,
+    count [1,1] i32, buf [n,W] u32)."""
+    n_chunks, wsize = words.shape
+    assert wsize & (wsize - 1) == 0, f"W={wsize} must be a power of two"
+    assert prev.shape == (n_chunks, 2), (prev.shape, n_chunks)
+    return pl.pallas_call(
+        _delta_pack_kernel,
+        grid=(n_chunks,),
+        in_specs=[
+            pl.BlockSpec((1, wsize), lambda i: (i, 0)),
+            pl.BlockSpec((1, 2), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 2), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i: (0, 0)),
+            pl.BlockSpec((n_chunks, wsize), lambda i: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((n_chunks, 2), jnp.uint32),
+            jax.ShapeDtypeStruct((n_chunks, 1), jnp.int32),
+            jax.ShapeDtypeStruct((n_chunks, 1), jnp.int32),
+            jax.ShapeDtypeStruct((1, 1), jnp.int32),
+            jax.ShapeDtypeStruct((n_chunks, wsize), jnp.uint32),
+        ],
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
+        interpret=interpret,
+    )(words, prev, nbytes.reshape(-1, 1))

@@ -1,0 +1,199 @@
+"""Public wrapper for the fused on-device delta pipeline.
+
+``delta_pack(x, prev_hashes, chunk_bytes)`` runs one fused pass (hash +
+diff + compaction) over a device array and returns a :class:`DeltaPack`:
+the new detection hashes, the dirty-chunk index vector, and handles to the
+*compacted* dirty-chunk buffers still resident on device.  The checkpoint
+writer then streams only the dirty rows host-side via
+:meth:`DeltaPack.read_chunks`, double-buffered (``copy_to_host_async`` of
+segment *i+1* is issued before segment *i*'s rows are consumed) so the
+device→host DMA overlaps the backend ``put_chunks`` upload.
+
+VMEM bounding: the kernel keeps its whole compacted output in VMEM, so the
+wrapper segments the array into super-blocks of at most ``seg_bytes``
+(default 4 MiB) chunks and launches one ``pallas_call`` per segment — at
+most two jit shapes (full segments + the tail) regardless of array size.
+
+Traffic accounting: ``bytes_transferred`` counts every byte this pack moved
+device→host — 12 bytes/chunk of metadata (8 hash + 4 dirty flag) plus the
+compacted rows actually materialized — the numerator of the detection
+roofline in benchmarks/bench_device_delta.py.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Iterable, Iterator, List, Optional, Tuple
+
+import numpy as np
+
+from repro.core import hashing
+
+DEFAULT_SEG_BYTES = 4 << 20      # compacted VMEM buffer bound per launch
+
+
+@dataclass
+class _Seg:
+    start: int                   # first chunk index covered by this segment
+    stop: int
+    dirty: np.ndarray            # global indices of dirty chunks, ascending
+    buf: Any                     # device uint32 [len(dirty), W] compacted rows
+
+
+@dataclass
+class DeltaPack:
+    """Result of one fused delta pass: detection hashes + dirty indices on
+    host, compacted dirty-chunk buffers still on device."""
+    nbytes: int
+    chunk_bytes: int
+    n_chunks: int
+    hashes: np.ndarray           # uint64 [n_chunks] detection hashes
+    dirty: np.ndarray            # ascending global dirty-chunk indices
+    bytes_transferred: int = 0   # device→host bytes moved so far
+    _segments: List[_Seg] = field(default_factory=list)
+
+    @property
+    def count(self) -> int:
+        return int(self.dirty.size)
+
+    @property
+    def dirty_set(self) -> set:
+        return set(int(i) for i in self.dirty)
+
+    def _chunk_len(self, i: int) -> int:
+        return min((i + 1) * self.chunk_bytes, self.nbytes) \
+            - i * self.chunk_bytes
+
+    def read_chunks(self, indices: Optional[Iterable[int]] = None
+                    ) -> Iterator[Tuple[int, bytes]]:
+        """Yield ``(chunk_index, chunk_bytes)`` for the requested dirty
+        chunks in ascending index order, moving only compacted rows.
+
+        Double-buffered: before segment *i*'s rows are materialized (a
+        blocking ``np.asarray``), segment *i+1*'s ``copy_to_host_async`` is
+        already in flight — so while the caller hashes/uploads segment *i*'s
+        chunks, the next segment's DMA proceeds in parallel.
+        """
+        want = sorted(set(int(i) for i in indices)) if indices is not None \
+            else [int(i) for i in self.dirty]
+        if not want:
+            return
+        bad = [i for i in want if not (0 <= i < self.n_chunks)]
+        assert not bad, f"chunk indices out of range: {bad[:4]}"
+        plan: List[Tuple[_Seg, List[int]]] = []
+        for seg in self._segments:
+            sel = [i for i in want if seg.start <= i < seg.stop]
+            if not sel:
+                continue
+            rowmap = {int(ci): r for r, ci in enumerate(seg.dirty)}
+            missing = [i for i in sel if i not in rowmap]
+            if missing:
+                raise KeyError(f"chunks {missing[:4]} are not dirty in "
+                               f"this pack")
+            plan.append((seg, sel))
+        if plan:
+            try:                    # prime the pipeline
+                plan[0][0].buf.copy_to_host_async()
+            except AttributeError:
+                pass
+        for k, (seg, sel) in enumerate(plan):
+            if k + 1 < len(plan):
+                try:                # overlap: next DMA behind this upload
+                    plan[k + 1][0].buf.copy_to_host_async()
+                except AttributeError:
+                    pass
+            host = np.asarray(seg.buf)          # blocks on this segment only
+            self.bytes_transferred += host.nbytes
+            rowmap = {int(ci): r for r, ci in enumerate(seg.dirty)}
+            raw = host.view(np.uint8)
+            for ci in sel:
+                row = raw[rowmap[ci]]
+                yield ci, row[: self._chunk_len(ci)].tobytes()
+
+
+def delta_pack(x, prev_hashes, chunk_bytes: int = 1 << 18, *,
+               backend: str = "pallas", interpret: bool = False,
+               seg_bytes: int = DEFAULT_SEG_BYTES) -> DeltaPack:
+    """Fused hash + diff + compaction of a device array against the previous
+    commit's detection hashes.
+
+    ``prev_hashes`` is uint64 [n_chunks] (the previous LeafRecord's
+    ``base_hashes``); ``chunk_bytes`` must be a power-of-two multiple of 4.
+    The returned hashes are bit-identical to ``hashing.chunk_hashes_np``.
+    """
+    import jax.numpy as jnp
+
+    from repro.kernels.chunk_hash.ops import _to_words
+    from repro.kernels.delta_pack.kernel import delta_pack_pallas
+    from repro.kernels.delta_pack.ref import delta_pack_ref
+
+    assert chunk_bytes % 4 == 0 and chunk_bytes & (chunk_bytes - 1) == 0
+    nbytes_total = int(x.size) * np.dtype(x.dtype).itemsize
+    if nbytes_total == 0:
+        return DeltaPack(nbytes=0, chunk_bytes=chunk_bytes, n_chunks=0,
+                         hashes=np.zeros((0,), np.uint64),
+                         dirty=np.zeros((0,), np.int64))
+    wpc = chunk_bytes // 4
+    n_chunks = -(-nbytes_total // chunk_bytes)
+    prev = np.asarray(prev_hashes, dtype=np.uint64).reshape(-1)
+    assert prev.shape == (n_chunks,), (prev.shape, n_chunks)
+    words = _to_words(x)
+    pad = n_chunks * wpc - words.shape[0]
+    if pad:
+        words = jnp.concatenate([words, jnp.zeros((pad,), jnp.uint32)])
+    words = words.reshape(n_chunks, wpc)
+    prev32 = jnp.asarray(hashing.split_u64(prev))
+    nb_np = np.minimum(
+        np.full(n_chunks, chunk_bytes, np.int64),
+        np.maximum(nbytes_total
+                   - np.arange(n_chunks, dtype=np.int64) * chunk_bytes, 0)
+    ).astype(np.int32)
+
+    seg_chunks = max(1, seg_bytes // chunk_bytes)
+    segs: List[_Seg] = []
+    hash_parts: List[np.ndarray] = []
+    dirty_parts: List[np.ndarray] = []
+    moved = 0
+    for s0 in range(0, n_chunks, seg_chunks):
+        s1 = min(s0 + seg_chunks, n_chunks)
+        fn = delta_pack_pallas if backend == "pallas" else delta_pack_ref
+        kw = {"interpret": interpret} if backend == "pallas" else {}
+        h, d, _pos, cnt, buf = fn(words[s0:s1], prev32[s0:s1],
+                                  jnp.asarray(nb_np[s0:s1]), **kw)
+        count = int(np.asarray(cnt)[0, 0])
+        dflags = np.asarray(d).reshape(-1)
+        hash_parts.append(np.asarray(h))
+        moved += (s1 - s0) * 12 + 4          # hash pair + flag (+ count)
+        gdirty = s0 + np.flatnonzero(dflags).astype(np.int64)
+        assert gdirty.size == count, (gdirty.size, count)
+        # trim to the valid compacted rows on device — only these rows ever
+        # cross device→host (read_chunks)
+        segs.append(_Seg(start=s0, stop=s1, dirty=gdirty, buf=buf[:count]))
+        dirty_parts.append(gdirty)
+    hashes = hashing.combine_u64(np.concatenate(hash_parts, axis=0))
+    dirty = np.concatenate(dirty_parts) if dirty_parts else \
+        np.zeros((0,), np.int64)
+    return DeltaPack(nbytes=nbytes_total, chunk_bytes=chunk_bytes,
+                     n_chunks=n_chunks, hashes=hashes, dirty=dirty,
+                     bytes_transferred=moved, _segments=segs)
+
+
+_AUTO_BACKEND: list = []        # memoized working backend ([] = unprobed)
+
+
+def delta_pack_auto(x, prev_hashes, chunk_bytes: int = 1 << 18,
+                    **kw) -> DeltaPack:
+    """DeltaPack with backend auto-selection: the Pallas kernel where it
+    runs (TPU), the jnp reference otherwise; raises only when neither works
+    (callers then take the host path).  Probed once and memoized, like
+    ``chunk_hash_u64_auto`` — this runs per leaf per commit."""
+    last_err: Exception = RuntimeError("no delta_pack backend")
+    for backend in _AUTO_BACKEND or ("pallas", "ref"):
+        try:
+            pack = delta_pack(x, prev_hashes, chunk_bytes,
+                              backend=backend, **kw)
+        except Exception as e:  # noqa: BLE001 — backend unsupported here
+            last_err = e
+            continue
+        _AUTO_BACKEND[:] = [backend]
+        return pack
+    raise last_err

@@ -1,0 +1,36 @@
+"""jnp reference for the fused delta-pack kernel — the bit-exact oracle.
+
+Same contract and output shapes as ``delta_pack_pallas`` but built from
+plain jnp ops: hashes via :func:`repro.core.hashing.chunk_hashes_jnp`,
+compaction via a stable argsort that moves dirty rows to the front in chunk
+order.  Runs anywhere jax runs (the "jnp" rung of the fallback ladder) and
+is what the Pallas kernel is tested against.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.hashing import chunk_hashes_jnp
+
+
+@jax.jit
+def delta_pack_ref(words: jax.Array, prev: jax.Array, nbytes: jax.Array):
+    """words uint32 [n, W]; prev uint32 [n, 2]; nbytes int32 [n].
+
+    Returns the kernel's 5-tuple: (hashes [n,2] u32, dirty [n,1] i32,
+    pos [n,1] i32, count [1,1] i32, buf [n,W] u32).  Rows of ``buf`` past
+    ``count`` hold clean chunks (the kernel leaves garbage there) — callers
+    must only read the first ``count`` rows either way.
+    """
+    hashes = chunk_hashes_jnp(words, nbytes)
+    dirty = jnp.any(hashes != prev, axis=1)
+    d32 = dirty.astype(jnp.int32)
+    cum = jnp.cumsum(d32)
+    pos = jnp.where(dirty, cum - 1, -1).astype(jnp.int32)
+    count = cum[-1:].astype(jnp.int32) if words.shape[0] else \
+        jnp.zeros((1,), jnp.int32)
+    # stable sort on ~dirty: dirty rows first, original chunk order kept
+    order = jnp.argsort(~dirty, stable=True)
+    buf = words[order]
+    return (hashes, d32[:, None], pos[:, None], count[:, None], buf)

@@ -1,6 +1,9 @@
 import os
-os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
-# ^ MUST be the first two lines: jax locks the device count on first init.
+
+from repro.configs.xla_flags import apply_xla_tuning, force_host_device_count
+force_host_device_count(512)    # merged, not clobbered: user XLA_FLAGS win
+apply_xla_tuning()              # opt-in ($KISHU_XLA_TUNING=1), no-op on CPU
+# ^ MUST run before jax's first init: the backend locks XLA_FLAGS then.
 """Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
 
 For each cell this driver:
