@@ -3,6 +3,7 @@ plus the parallel-engine evidence: serial vs parallel incremental checkout
 wall time per chunk-store backend (DESIGN.md §9)."""
 from __future__ import annotations
 
+import json
 import os
 import shutil
 import tempfile
@@ -139,5 +140,8 @@ def rows(results: List[MethodResult]) -> List[dict]:
             if not r.failed else "",
             "failed": r.failed,
             "note": r.note,
+            # where the time went (span-name -> seconds); JSON-encoded so
+            # the CSV stays one cell wide and BENCH json rows stay typed
+            "stage_s": json.dumps(r.stage_s) if r.stage_s else "",
         })
     return table

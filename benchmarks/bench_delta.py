@@ -59,6 +59,8 @@ def run(n_covs: int = 4, elems: int = 1 << 16, chunk_bytes: int = 1 << 14,
                     # cache off: attribute savings to the delta plan itself
                     sess = KishuSession(store, chunk_bytes=chunk_bytes,
                                         cache_bytes=0)
+                    # stage-time vectors for the emitted rows (§16)
+                    sess.obs.tracer.enabled = True
 
                     def init(ns, seed):
                         rng = np.random.default_rng(seed)
@@ -116,10 +118,21 @@ def run(n_covs: int = 4, elems: int = 1 << 16, chunk_bytes: int = 1 << 14,
                                for n in sess.ns.names()}
                         identical = identical and got == snap2
                         prev, prev_snap = c2, snap2
+                    stage_totals = sess.obs.tracer.stage_totals()
                     sess.close()
-                    for phase, moved, logical, wall in (
-                            ("checkpoint", ck_moved, ck_logical, ck_wall),
-                            ("checkout", co_moved, co_logical, co_wall)):
+                    # split the span totals between the two emitted rows:
+                    # commit-pipeline stages on the checkpoint row,
+                    # checkout-pipeline stages on the checkout row
+                    ck_stages = {"exec", "detect", "delta_pack", "serialize",
+                                 "put_chunks", "epoch_fence", "publish",
+                                 "commit"}
+                    co_stages = {"plan", "fetch", "materialize", "patch",
+                                 "swap", "checkout"}
+                    for phase, moved, logical, wall, names in (
+                            ("checkpoint", ck_moved, ck_logical, ck_wall,
+                             ck_stages),
+                            ("checkout", co_moved, co_logical, co_wall,
+                             co_stages)):
                         rows.append({
                             "bench": "delta",
                             "workload": f"partial_dirty_{dirty_frac:g}",
@@ -132,6 +145,9 @@ def run(n_covs: int = 4, elems: int = 1 << 16, chunk_bytes: int = 1 << 14,
                             "covs_patched": patched if phase == "checkout"
                             else None,
                             "identical": identical,
+                            "stage_s": {k: round(v, 6) for k, v
+                                        in sorted(stage_totals.items())
+                                        if k in names},
                         })
 
         if with_cache_row:

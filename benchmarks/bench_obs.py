@@ -1,0 +1,195 @@
+"""Observability overhead bench — tracing on vs off on the sqlite commit
+path (DESIGN.md §16 overhead budget).
+
+Both modes run with the metrics plane in place (InstrumentedStore is
+always on); the variable under test is *span tracing*, whose budget is
+< 3% added wall on the sqlite commit bench.  Each mode runs ``repeats``
+fresh sessions of ``n_cells`` partially-dirty commits plus an undo/redo
+checkout pair; per-mode cost is the **min** across repeats (noise floor,
+not the mean — the bar gates CI).  The traced mode's stage-time vector and
+span count ride along in the row, so BENCH_obs.json doubles as a stage
+breakdown artifact.
+
+``smoke()`` (CI ``--smoke-obs``) additionally asserts the export contract:
+a traced commit+checkout session yields a Chrome trace with >= 6 distinct
+pipeline stages and parent/child intervals that nest.
+"""
+from __future__ import annotations
+
+import os
+import tempfile
+import time
+from typing import List
+
+OVERHEAD_BUDGET_PCT = 3.0
+
+
+def _workload(n_covs: int, elems: int, chunk_bytes: int):
+    import numpy as np
+
+    chunk_elems = chunk_bytes // 4
+    n_chunks = -(-elems * 4 // chunk_bytes)
+    dirty = max(1, n_chunks // 10)          # ~10% dirty per cell
+
+    def init(ns, **_):
+        rng = np.random.default_rng(7)
+        for i in range(n_covs):
+            ns[f"v{i:02d}"] = rng.standard_normal(elems).astype(np.float32)
+
+    def mutate(ns, seed=0, **_):
+        rng = np.random.default_rng(seed)
+        for i in range(n_covs):
+            a = ns[f"v{i:02d}"]
+            for c in range(dirty):
+                a[c * chunk_elems] = rng.standard_normal()
+
+    return init, mutate
+
+
+def _run_once(tmp: str, tag: str, *, trace: bool, n_covs: int, elems: int,
+              chunk_bytes: int, n_cells: int) -> dict:
+    from repro.core import KishuSession
+    from repro.core.chunkstore import SQLiteStore
+
+    store = SQLiteStore(os.path.join(tmp, f"obs_{tag}.db"))
+    sess = KishuSession(store, chunk_bytes=chunk_bytes, cache_bytes=0,
+                        trace=trace)
+    init, mutate = _workload(n_covs, elems, chunk_bytes)
+    sess.register("init", init)
+    sess.register("mutate", mutate)
+    sess.init_state({})
+    first = sess.run("init")
+
+    commits = []
+    cell_s = []
+    for s in range(n_cells):
+        t0 = time.perf_counter()
+        commits.append(sess.run("mutate", seed=s))
+        cell_s.append(time.perf_counter() - t0)
+
+    t0 = time.perf_counter()
+    sess.checkout(commits[0])
+    sess.checkout(commits[-1])
+    checkout_s = time.perf_counter() - t0
+
+    out = {"cell_s": cell_s, "checkout_s": checkout_s,
+           "n_spans": len(sess.obs.tracer.spans),
+           "stage_s": {k: round(v, 6) for k, v in
+                       sorted(sess.obs.tracer.stage_totals().items())}}
+    sess.close()
+    del first
+    return out
+
+
+def run(n_covs: int = 4, elems: int = 1 << 16, chunk_bytes: int = 1 << 13,
+        n_cells: int = 20, repeats: int = 5) -> List[dict]:
+    """One row per mode (trace off / on) + one overhead summary row.
+
+    Per-cell commit timings are reduced element-wise (min across repeats,
+    per cell index — same seeds, so cell i does identical work every
+    repeat) before summing: a single fsync stall or GC pause then taxes
+    one cell of one repeat instead of poisoning a whole run's total, which
+    is what the naive min-of-run-totals suffers from on shared CI boxes.
+    """
+    rows: List[dict] = []
+    runs = {"off": [], "on": []}
+    with tempfile.TemporaryDirectory(prefix="kishu_obs_") as tmp:
+        # warmup pair (page cache, sqlite schema, jit) — discarded
+        for trace in (False, True):
+            _run_once(tmp, f"warm_{int(trace)}", trace=trace, n_covs=n_covs,
+                      elems=elems, chunk_bytes=chunk_bytes, n_cells=2)
+        # interleave modes across repeats so drift (thermal, page cache)
+        # hits both alike
+        for r in range(repeats):
+            for trace in (False, True):
+                res = _run_once(tmp, f"{r}_{int(trace)}", trace=trace,
+                                n_covs=n_covs, elems=elems,
+                                chunk_bytes=chunk_bytes, n_cells=n_cells)
+                runs["on" if trace else "off"].append(res)
+    floor = {}
+    for key in ("off", "on"):
+        per_cell = [min(rr["cell_s"][i] for rr in runs[key])
+                    for i in range(n_cells)]
+        floor[key] = {
+            "commit_s": sum(per_cell),
+            "checkout_s": min(rr["checkout_s"] for rr in runs[key]),
+        }
+        last = runs[key][-1]
+        rows.append({
+            "bench": "obs", "backend": "sqlite", "trace": key,
+            "n_cells": n_cells,
+            "commit_s": round(floor[key]["commit_s"], 5),
+            "commit_ms_per_cell": round(
+                floor[key]["commit_s"] / n_cells * 1e3, 4),
+            "checkout_s": round(floor[key]["checkout_s"], 5),
+            "n_spans": last["n_spans"],
+            "stage_s": last["stage_s"],
+        })
+    overhead_pct = (floor["on"]["commit_s"] - floor["off"]["commit_s"]) \
+        / floor["off"]["commit_s"] * 100.0
+    co_overhead_pct = (floor["on"]["checkout_s"]
+                       - floor["off"]["checkout_s"]) \
+        / floor["off"]["checkout_s"] * 100.0
+    rows.append({
+        "bench": "obs", "backend": "sqlite", "trace": "overhead",
+        "n_cells": n_cells,
+        "commit_overhead_pct": round(overhead_pct, 3),
+        "checkout_overhead_pct": round(co_overhead_pct, 3),
+        "budget_pct": OVERHEAD_BUDGET_PCT,
+    })
+    return rows
+
+
+def _check_export_contract() -> dict:
+    """A traced commit+checkout exports >= 6 distinct pipeline stages with
+    correct parent/child interval nesting (the acceptance bar)."""
+    from repro.core import KishuSession, open_store
+    from repro.obs import chrome_trace
+
+    sess = KishuSession(open_store("memory://"), chunk_bytes=1 << 12,
+                        trace=True)
+    init, mutate = _workload(2, 1 << 14, 1 << 12)
+    sess.register("init", init)
+    sess.register("mutate", mutate)
+    sess.init_state({})
+    c1 = sess.run("init")
+    sess.run("mutate", seed=1)
+    sess.checkout(c1)
+    spans = list(sess.obs.tracer.spans)
+    sess.close()
+
+    doc = chrome_trace(spans)
+    events = doc["traceEvents"]
+    assert events and all(
+        e["ph"] == "X" and "ts" in e and "dur" in e for e in events)
+    names = {e["name"] for e in events}
+    assert len(names) >= 6, f"only {len(names)} distinct stages: {names}"
+    by_id = {r.span_id: r for r in spans}
+    nested = 0
+    for r in spans:
+        if r.parent_id is None:
+            continue
+        p = by_id[r.parent_id]          # parent must be recorded too
+        assert p.t0_s - 1e-6 <= r.t0_s \
+            and r.t0_s + r.dur_s <= p.t0_s + p.dur_s + 1e-6, \
+            f"span {r.name} escapes parent {p.name}"
+        nested += 1
+    assert nested > 0, "no nested spans recorded"
+    return {"bench": "obs", "trace": "export", "stages": len(names),
+            "events": len(events), "nested_spans": nested}
+
+
+def smoke() -> List[dict]:
+    """CI gate: export contract + tracing overhead under budget."""
+    rows = [_check_export_contract()]
+    rows += run(n_cells=15, repeats=4)
+    summary = rows[-1]
+    assert summary["commit_overhead_pct"] < OVERHEAD_BUDGET_PCT, (
+        f"tracing overhead {summary['commit_overhead_pct']}% exceeds "
+        f"{OVERHEAD_BUDGET_PCT}% budget on the sqlite commit bench")
+    return rows
+
+
+if __name__ == "__main__":
+    import json
+    print(json.dumps(smoke(), indent=1))

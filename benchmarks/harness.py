@@ -27,6 +27,10 @@ class MethodResult:
     branch_s: Optional[float] = None
     failed: bool = False
     note: str = ""
+    # per-stage wall-time vector (span-name -> total seconds), aggregated
+    # from the session tracer so BENCH rows show WHERE time went, not just
+    # totals (DESIGN.md §16); empty for baselines without a tracer
+    stage_s: Dict[str, float] = field(default_factory=dict)
 
     @property
     def total_bytes(self) -> int:
@@ -51,6 +55,9 @@ def run_kishu(wl: Workload, *, check_all: bool = False,
     store = MemoryStore()
     cls = DetReplaySession if det_replay else KishuSession
     sess = cls(store, chunk_bytes=chunk_bytes, check_all=check_all)
+    # stage breakdown rides every row: flip the tracer on post-construction
+    # (the enabled flag is read per span call) and fold totals in at the end
+    sess.obs.tracer.enabled = True
     name = ("kishu_det_replay" if det_replay
             else "kishu_check_all" if check_all else "kishu")
     res = MethodResult(name, wl.name)
@@ -92,6 +99,8 @@ def run_kishu(wl: Workload, *, check_all: bool = False,
         t0 = time.perf_counter()
         sess.checkout(res.commits[-1])          # switch back to branch A
         res.branch_s = time.perf_counter() - t0
+    res.stage_s = {k: round(v, 6)
+                   for k, v in sorted(sess.obs.tracer.stage_totals().items())}
     return res
 
 

@@ -127,6 +127,16 @@ def bench_device_delta(quick: bool):
     return rows
 
 
+def bench_obs(quick: bool):
+    """Observability plane: tracing-on vs tracing-off commit+checkout
+    latency on sqlite (overhead budget < 3%), Chrome-trace export contract
+    (>= 6 stages, correct nesting).  Writes BENCH_obs.json."""
+    from benchmarks import bench_obs as b
+    rows = b.run(n_cells=15, repeats=3) if quick else b.run()
+    _write_bench_json("BENCH_obs.json", rows)
+    return rows
+
+
 def bench_tracking(quick: bool):
     """Table 6 / Fig 17 (tracking overhead)."""
     from benchmarks import bench_tracking as b
@@ -192,6 +202,7 @@ ALL = {
     "fabric": bench_fabric,
     "txn": bench_txn,
     "multi": bench_multi,
+    "obs": bench_obs,
     "tracking": bench_tracking,
     "covar_sweep": bench_covar_sweep,
     "scalability": bench_scalability,
@@ -223,6 +234,10 @@ def main() -> None:
                     help="fast CI gate: multi-session safety — N-session "
                          "scaling rows, two-writer interleave, lease-steal "
                          "assertions + BENCH_multi.json")
+    ap.add_argument("--smoke-obs", action="store_true",
+                    help="fast CI gate: observability plane — Chrome-trace "
+                         "export contract + tracing-overhead budget (<3%% "
+                         "on the sqlite commit bench) + BENCH_obs.json")
     args = ap.parse_args()
     if args.smoke:
         from benchmarks import bench_delta as b
@@ -258,6 +273,13 @@ def main() -> None:
         _print_rows(rows)
         _write_bench_json("BENCH_multi.json", rows)
         print("# multi smoke OK", flush=True)
+        return
+    if args.smoke_obs:
+        from benchmarks import bench_obs as b
+        rows = b.smoke()        # raises AssertionError on regression
+        _print_rows(rows)
+        _write_bench_json("BENCH_obs.json", rows)
+        print("# obs smoke OK", flush=True)
         return
     names = [args.only] if args.only else list(ALL)
     for name in names:

@@ -16,6 +16,7 @@ round-trips.
 from __future__ import annotations
 
 import time
+from contextlib import nullcontext
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Sequence, Tuple
 
@@ -144,6 +145,12 @@ class StateLoader:
         # the gate stays serial outright; above it a measured trial decides.
         # probe_threshold_s = 0.0 forces the pipeline; inf forces serial.
         self.probe_threshold_s = parallel.PARALLEL_LATENCY_THRESHOLD_S
+        # observability handle (set by the session owning this loader)
+        self.obs = None
+
+    def _span(self, name: str, **args):
+        return self.obs.span(name, **args) if self.obs is not None \
+            else nullcontext()
 
     def _cache_probe(self, keys, stats: Optional[CheckoutStats]
                      ) -> Dict[str, bytes]:
@@ -509,34 +516,38 @@ class StateLoader:
         fb0 = delta_mod.kernel_fallbacks()
         cur = self.graph.head
         td = time.perf_counter()
-        plan: CheckoutPlan = self.graph.diff(cur, target)
-        stats.diff_s = time.perf_counter() - td
-        stats.covs_identical = len(plan.identical)
-
-        # 1. chunk-level refinement: diverged covs whose live buffer matches
-        #    the target structurally only fetch their differing chunks
-        patches, full_items = self.plan_patches(plan, records,
-                                                tracked_ns.base)
-        patch_data, patches, demoted = self._fetch_patch_chunks(patches,
-                                                                stats)
+        # 1. plan: graph diff + chunk-level refinement — diverged covs whose
+        #    live buffer matches the target structurally only fetch their
+        #    differing chunks
+        with self._span("plan"):
+            plan: CheckoutPlan = self.graph.diff(cur, target)
+            stats.diff_s = time.perf_counter() - td
+            stats.covs_identical = len(plan.identical)
+            patches, full_items = self.plan_patches(plan, records,
+                                                    tracked_ns.base)
+        with self._span("fetch"):
+            patch_data, patches, demoted = self._fetch_patch_chunks(patches,
+                                                                    stats)
         full_items = sorted(full_items + demoted)
 
         # 2. load fully-diverged co-variables (before mutating anything),
         #    chunk I/O planned up front and prefetched in parallel
-        loaded = self.load_covs(full_items, stats)
+        with self._span("materialize", covs=len(full_items)):
+            loaded = self.load_covs(full_items, stats)
 
         # 3. apply patches (all data is in hand); unexpected failures fall
         #    back to the full serial load of just that co-variable
-        for p in patches:
-            try:
-                loaded[p.key] = self._apply_patch(p, patch_data, stats,
-                                                  tracked_ns.base)
-            except Exception:  # noqa: BLE001 — corrupt patch: full reload
-                loaded[p.key] = self.load_cov(p.key, p.version, stats)
+        with self._span("patch", covs=len(patches)):
+            for p in patches:
+                try:
+                    loaded[p.key] = self._apply_patch(p, patch_data, stats,
+                                                      tracked_ns.base)
+                except Exception:  # noqa: BLE001 — corrupt patch: reload
+                    loaded[p.key] = self.load_cov(p.key, p.version, stats)
 
         # 4. swap into the namespace (tracking paused: checkout is not access)
         new_records = dict(records)
-        with tracked_ns.pause():
+        with self._span("swap"), tracked_ns.pause():
             for key in plan.to_delete:
                 for name in key:
                     if name in tracked_ns.base:

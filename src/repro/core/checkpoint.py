@@ -19,6 +19,7 @@ from __future__ import annotations
 import queue
 import threading
 import time
+from contextlib import nullcontext
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -265,6 +266,10 @@ class CheckpointWriter:
         # keys immediately before the backend put, so a crashed commit's
         # chunks are journaled and recovery can roll them back exactly
         self.journal: Optional[Callable[[List[str]], None]] = None
+        # observability handle (set by the session): spans opened here from
+        # the async drain thread become roots — contextvars don't cross
+        # threads, and off-thread work genuinely is off the commit path
+        self.obs = None
         self._q: "queue.Queue" = queue.Queue()
         self._batch: List[Tuple[str, bytes]] = []     # sync-mode delta batch
         self._batch_keys: set = set()
@@ -309,7 +314,8 @@ class CheckpointWriter:
                                                 # find them
                 if journaled:
                     try:
-                        self.store.put_chunks(batch)
+                        with self._span("put_chunks", n=len(batch)):
+                            self.store.put_chunks(batch)
                     except Exception:  # noqa: BLE001
                         # batch op failed somewhere: degrade to per-chunk
                         # puts so one bad chunk doesn't drop its whole batch
@@ -343,6 +349,10 @@ class CheckpointWriter:
             if len(self._batch) >= self.drain_batch:
                 self._flush_batch()      # bound buffered delta memory
 
+    def _span(self, name: str, **args):
+        return self.obs.span(name, **args) if self.obs is not None \
+            else nullcontext()
+
     def _flush_batch(self) -> None:
         if not self._batch:
             return
@@ -354,7 +364,8 @@ class CheckpointWriter:
                 # (the exception propagates to run()) so no chunk ever
                 # lands unjournaled
                 self.journal([ck for ck, _ in batch])
-            self.store.put_chunks(batch)
+            with self._span("put_chunks", n=len(batch)):
+                self.store.put_chunks(batch)
         finally:
             # the batch leaves the pipeline on ANY outcome — journal
             # failures included — or a later epoch fence would wait forever
@@ -393,13 +404,14 @@ class CheckpointWriter:
         t0 = time.perf_counter()
         stats = WriteStats()
         manifests: Dict[str, dict] = {}
-        for key, records in delta.updated.items():
-            man = build_manifest(self.store, key, records, ns,
-                                 self.chunk_bytes, prev_manifest_of(key),
-                                 stats, self._put, self._has,
-                                 delta_ranges=self.delta_ranges,
-                                 packs=packs)
-            manifests[key_str(key)] = man
+        with self._span("serialize", covs=len(delta.updated)):
+            for key, records in delta.updated.items():
+                man = build_manifest(self.store, key, records, ns,
+                                     self.chunk_bytes, prev_manifest_of(key),
+                                     stats, self._put, self._has,
+                                     delta_ranges=self.delta_ranges,
+                                     packs=packs)
+                manifests[key_str(key)] = man
         self._flush_batch()                  # sync mode: durable on return
         if self.async_write and self.write_deadline_s:
             # monotonic, never wall-clock: an NTP step would expire this

@@ -18,6 +18,7 @@ the dirty ranges cross the device→host boundary.
 """
 from __future__ import annotations
 
+import contextlib
 import logging
 import os
 from typing import Any, Callable, List, Optional, Sequence, Tuple
@@ -27,19 +28,39 @@ import numpy as np
 _log = logging.getLogger(__name__)
 
 # Device-kernel fallback observability: every silent degradation to a host
-# path bumps this counter (snapshotted into WriteStats/CheckoutStats per
+# path bumps a counter (snapshotted into WriteStats/CheckoutStats per
 # operation) and the *first* one per session logs a warning — a silently
 # slow path must be visible without turning every commit into log spam.
+#
+# The counter lives in the *active session's* metrics registry
+# (repro.obs.active()) when a session is executing: under kishud many
+# sessions share this process, so a module global would cross-attribute
+# tenants and the fb0 delta snapshots would race.  The module globals below
+# remain as a deprecated process-wide shim for callers running outside any
+# session (tests, ad-hoc kernel use).
 _kernel_fallbacks = 0
 _fallback_logged = False
+
+
+def _active_obs():
+    try:
+        from repro import obs as _obs
+        return _obs.active()
+    except Exception:  # noqa: BLE001 — obs must never break the hot path
+        return None
 
 
 def note_kernel_fallback(where: str, err: Exception) -> None:
     """Record one device-kernel → host-path degradation."""
     global _kernel_fallbacks, _fallback_logged
-    _kernel_fallbacks += 1
-    if not _fallback_logged:
+    _kernel_fallbacks += 1          # process-wide shim stays monotonic
+    o = _active_obs()
+    if o is not None:
+        first = o.note_kernel_fallback(where)
+    else:
+        first = not _fallback_logged
         _fallback_logged = True
+    if first:
         _log.warning(
             "device kernel unavailable in %s (%s: %s); using the host path. "
             "Logged once per session — see the kernel_fallbacks counter in "
@@ -48,7 +69,12 @@ def note_kernel_fallback(where: str, err: Exception) -> None:
 
 
 def kernel_fallbacks() -> int:
-    """Total device-kernel fallbacks this session (monotonic)."""
+    """Total device-kernel fallbacks — scoped to the active session's
+    metrics registry when one is executing; otherwise the (deprecated)
+    process-wide total."""
+    o = _active_obs()
+    if o is not None:
+        return o.kernel_fallbacks()
     return _kernel_fallbacks
 
 
@@ -165,12 +191,16 @@ def device_delta_pack(base: Any, prev_hashes, chunk_bytes: int):
     prev = np.asarray(prev_hashes, dtype=np.uint64).reshape(-1)
     if prev.shape[0] != n_chunks:
         return None                      # structure changed: no valid diff
-    try:
-        from repro.kernels.delta_pack.ops import delta_pack_auto
-        return delta_pack_auto(base, prev, chunk_bytes)
-    except Exception as e:  # noqa: BLE001 — no kernel backend: host path
-        note_kernel_fallback("device_delta_pack", e)
-        return None
+    o = _active_obs()
+    span = o.span("delta_pack", nbytes=nbytes) if o is not None \
+        else contextlib.nullcontext()
+    with span:
+        try:
+            from repro.kernels.delta_pack.ops import delta_pack_auto
+            return delta_pack_auto(base, prev, chunk_bytes)
+        except Exception as e:  # noqa: BLE001 — no kernel backend: host path
+            note_kernel_fallback("device_delta_pack", e)
+            return None
 
 
 # ---------------------------------------------------------------------------

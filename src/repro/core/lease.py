@@ -86,17 +86,24 @@ class Lease:
     RENEW_FRAC = 0.5
 
     def __init__(self, store: ChunkStore, name: str = "writer", *,
-                 owner: Optional[str] = None, ttl_s: float = DEFAULT_TTL_S):
+                 owner: Optional[str] = None, ttl_s: float = DEFAULT_TTL_S,
+                 obs=None):
         self.store = store
         self.name = name
         self.doc_name = LEASE_PREFIX + name
         self.owner = owner or default_owner_id()
         self.ttl_s = float(ttl_s)
         self.token = 0
+        self.obs = obs                # optional SessionObs for event counts
         self._held = False
         self._horizon = 0.0           # local-monotonic validity deadline
         self._observed = None         # (doc fingerprint, first-seen mono)
         self._lock = threading.RLock()
+
+    def _event(self, event: str) -> None:
+        if self.obs is not None:
+            self.obs.registry.counter("kishu_lease_events_total",
+                                      event=event).inc()
 
     # ------------------------------------------------------------------
     # acquisition
@@ -122,8 +129,13 @@ class Lease:
 
     def _try_acquire(self, steal: bool) -> bool:
         cur = self.store.get_meta(self.doc_name)
+        takeover = None
         if cur is not None and cur.get("owner") != self.owner:
-            if not (steal or self._expired(cur)):
+            if steal:
+                takeover = "steal"
+            elif self._expired(cur):
+                takeover = "expired_takeover"
+            else:
                 return False
         token = int((cur or {}).get("token", 0)) + 1
         t0 = time.monotonic()
@@ -136,6 +148,7 @@ class Lease:
             self.token = token
             self._held = True
             self._horizon = t0 + self.ttl_s
+        self._event(takeover or "acquire")
         return True
 
     def _doc(self, token: int) -> dict:
@@ -157,6 +170,7 @@ class Lease:
                 return self
             if time.monotonic() >= deadline:
                 cur = self.store.get_meta(self.doc_name) or {}
+                self._event("held")
                 raise LeaseHeld(
                     f"lease {self.doc_name!r} held by "
                     f"{cur.get('owner', '?')} (token {cur.get('token')}); "
@@ -178,6 +192,7 @@ class Lease:
             if cur is None or cur.get("owner") != self.owner \
                     or cur.get("token") != self.token:
                 self._held = False
+                self._event("lost")
                 raise LeaseLost(
                     f"lease {self.doc_name!r} taken over by "
                     f"{(cur or {}).get('owner', '?')} "
@@ -198,6 +213,7 @@ class Lease:
             now = time.monotonic()
             if now >= self._horizon:
                 self._held = False
+                self._event("lost")
                 raise LeaseLost(
                     f"lease {self.doc_name!r} expired locally "
                     f"(no renew within ttl={self.ttl_s}s)")

@@ -34,6 +34,7 @@ from repro.core.namespace import Namespace, TrackedNamespace
 from repro.core.restore import DataRestorer
 from repro.core.txn import TxnEngine, global_live_chunks
 from repro.core.txn import purge_tombstones as txn_purge_tombstones
+from repro.obs import TRACE_META_PREFIX, SessionObs
 
 
 class QuotaExceededError(RuntimeError):
@@ -86,7 +87,8 @@ class KishuSession:
                  lease_ttl_s: Optional[float] = None,
                  lease_wait_s: float = 0.0,
                  lease_steal: bool = False,
-                 chunk_cache: Optional[ChunkCache] = None):
+                 chunk_cache: Optional[ChunkCache] = None,
+                 trace: Optional[bool] = None):
         # multi-session knobs (DESIGN.md §14):
         #   tenant       — scope this session to `tenant/<id>/` metadata on
         #                  the shared store (chunks stay shared/deduped)
@@ -97,18 +99,36 @@ class KishuSession:
         #                  lease-less with only the HEAD-seq guard, which
         #                  keeps single-writer usage zero-cost
         #   chunk_cache  — share one cache across sessions (kishud)
+        #   trace        — pipeline span tracing (DESIGN.md §16); None
+        #                  defers to $KISHU_TRACE, default off
+        from repro.obs.instrument import InstrumentedStore
+
         if tenant is not None and not isinstance(store, NamespacedStore):
             store = NamespacedStore(store, tenant)
-        self.store = store
         self.tenant = getattr(store, "tenant_id", None)
+        # observability plane (DESIGN.md §16): per-session tracer + metrics.
+        # The InstrumentedStore sits INSIDE the namespace view — the txn
+        # engine's isinstance(NamespacedStore) unwrapping and meta-prefix
+        # handling must keep seeing the view as the outermost layer.
+        self.obs = SessionObs(trace=trace, tenant=self.tenant)
+        if isinstance(store, NamespacedStore):
+            inner = store.root_store
+            if not isinstance(inner, InstrumentedStore):
+                store = NamespacedStore(
+                    InstrumentedStore(inner, self.obs.registry),
+                    store.tenant_id)
+        elif not isinstance(store, InstrumentedStore):
+            store = InstrumentedStore(store, self.obs.registry)
+        self.store = store
         self.quota_bytes = quota_bytes
         # the lease is taken BEFORE recovery/graph construction: rolling
         # back a journal requires proving its writer is gone, and holding
         # the namespace's writer lease is exactly that proof
         self.lease: Optional[Lease] = None
         if lease_ttl_s is not None:
-            self.lease = Lease(store, ttl_s=lease_ttl_s).acquire(
-                wait_s=lease_wait_s, steal=lease_steal)
+            self.lease = Lease(store, ttl_s=lease_ttl_s, obs=self.obs
+                               ).acquire(wait_s=lease_wait_s,
+                                         steal=lease_steal)
         self.ns = Namespace()
         self.tracked = TrackedNamespace(self.ns)
         self.builder = RecordBuilder(chunk_bytes, hasher=hasher)
@@ -144,9 +164,15 @@ class KishuSession:
                                 early_snapshot=not async_write)
         self.engine.lease = self.lease    # checked/renewed on every publish
         self.writer.journal = self.engine.journal_chunks
+        # worker threads (async drain, publish worker) don't inherit the
+        # activation contextvar — they report through these handles instead
+        self.writer.obs = self.obs
+        self.engine.obs = self.obs
         # graph open runs txn.recover first: a crashed predecessor's
         # unsealed transactions are replayed or rolled back before loading
-        self.graph = CheckpointGraph(store, engine=self.engine)
+        # (activated so recovery counters attribute to this session)
+        with self.obs.activate():
+            self.graph = CheckpointGraph(store, engine=self.engine)
         self.registry: Dict[str, Callable] = {}
         self.records: Dict[str, Any] = {}
         self.covs: Dict[CovKey, List[str]] = {}
@@ -156,8 +182,16 @@ class KishuSession:
 
         self.loader = StateLoader(self.graph, store, io_threads=io_threads,
                                   cache=self.chunk_cache)
+        self.loader.obs = self.obs
         self.restorer = DataRestorer(self.graph, self.loader, self.registry)
         self.loader.fallback = self.restorer.recompute
+        # live cache gauges: this session's view of its (possibly shared)
+        # chunk cache — kishud disambiguates by tenant const-label
+        reg = self.obs.registry
+        reg.gauge("kishu_cache_hits_total", fn=lambda: self.chunk_cache.hits)
+        reg.gauge("kishu_cache_misses_total",
+                  fn=lambda: self.chunk_cache.misses)
+        reg.gauge("kishu_cache_bytes", fn=lambda: self.chunk_cache.bytes_used)
 
         if not self.graph.nodes:
             self.graph.init_root()
@@ -194,8 +228,9 @@ class KishuSession:
         this cell's plan stage — the engine fences chunk durability on its
         own thread, so the cell loop never waits on the store's metadata
         round-trips."""
-        plan = self._plan_run(command, args)
-        return self._execute_commit(plan, _message)
+        with self.obs.activate(), self.obs.span("commit", command=command):
+            plan = self._plan_run(command, args)
+            return self._execute_commit(plan, _message)
 
     def _plan_run(self, name: str, args: dict) -> "_RunPlan":
         """Stage 1: run the cell against the tracked namespace and detect
@@ -208,7 +243,8 @@ class KishuSession:
 
         self.tracked.reset()
         t0 = time.perf_counter()
-        fn(self.tracked, **args)
+        with self.obs.span("exec"):
+            fn(self.tracked, **args)
         stats.exec_s = time.perf_counter() - t0
 
         accessed = (set(self.tracked.accessed) | set(self.tracked.written)
@@ -217,9 +253,11 @@ class KishuSession:
             accessed = set(self.records) | set(self.ns.names())
 
         t0 = time.perf_counter()
-        delta, self.records = detect_delta(self.records, self.covs, self.ns,
-                                           accessed, self.builder)
-        self.covs = group_covariables(self.records)
+        with self.obs.span("detect"):
+            delta, self.records = detect_delta(self.records, self.covs,
+                                               self.ns, accessed,
+                                               self.builder)
+            self.covs = group_covariables(self.records)
         stats.detect_s = time.perf_counter() - t0
 
         # dependencies: accessed co-variables at their pre-execution versions
@@ -300,12 +338,14 @@ class KishuSession:
     # incremental checkout
     # ------------------------------------------------------------------
     def checkout(self, commit_id: str) -> CheckoutStats:
-        self.writer.flush()
-        self.engine.flush()     # pending publishes land before time travel
-        self.restorer.clear_memo()
-        self.records, stats = self.loader.checkout(self.tracked, self.records,
-                                                   commit_id)
-        self.covs = group_covariables(self.records)
+        with self.obs.activate(), self.obs.span("checkout",
+                                                commit=commit_id):
+            self.writer.flush()
+            self.engine.flush()  # pending publishes land before time travel
+            self.restorer.clear_memo()
+            self.records, stats = self.loader.checkout(
+                self.tracked, self.records, commit_id)
+            self.covs = group_covariables(self.records)
         self.last_checkout = stats
         return stats
 
@@ -394,10 +434,28 @@ class KishuSession:
             out["lease_token"] = self.lease.token
         return out
 
+    def metrics_text(self) -> str:
+        """This session's metrics as Prometheus text exposition."""
+        from repro.obs import render
+        return render([self.obs.registry])
+
+    def _persist_obs(self) -> None:
+        """Best-effort span/metric snapshot under ``obs/trace/<sid>`` —
+        only when tracing was opted into: the default path must add zero
+        store writes (crash-injection op sweeps count every one)."""
+        if not self.obs.tracer.enabled or not self.obs.tracer.spans:
+            return
+        try:
+            self.store.put_meta(TRACE_META_PREFIX + self.obs.sid,
+                                self.obs.to_doc())
+        except Exception:  # noqa: BLE001 — a dying store must not block close
+            pass
+
     def close(self) -> None:
         try:
             self.writer.flush()
             self.engine.flush()
+            self._persist_obs()
         finally:
             # a flush error (poisoned engine, deferred publish failure)
             # must still join the worker threads; the unsealed journal is

@@ -69,6 +69,7 @@ import os
 import threading
 import time
 import uuid
+from contextlib import nullcontext
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Set
 
@@ -162,6 +163,10 @@ class TxnEngine:
         #: optional writer lease checked (and kept renewed) on every
         #: publish; set by the owning session after acquisition
         self.lease: Optional[Lease] = None
+        #: observability handle (set by the session) — used instead of the
+        #: activation contextvar because async publishes run on a worker
+        #: thread that never sees the session's activation
+        self.obs = None
         #: per-engine nonce for journal IDs — two engines in one process
         #: share a pid and both start their counters at zero, so pid +
         #: counter alone collide when they open within the same ms
@@ -184,6 +189,21 @@ class TxnEngine:
             self._worker = threading.Thread(target=self._publish_loop,
                                             daemon=True)
             self._worker.start()
+
+    # ------------------------------------------------------------------
+    # observability (no-ops until the session attaches a handle)
+    # ------------------------------------------------------------------
+    def _span(self, name: str, **args):
+        return self.obs.span(name, **args) if self.obs is not None \
+            else nullcontext()
+
+    def _count(self, name: str, **labels) -> None:
+        if self.obs is not None:
+            self.obs.registry.counter(name, **labels).inc()
+
+    def _observe(self, name: str, v: float) -> None:
+        if self.obs is not None:
+            self.obs.registry.histogram(name).observe(v)
 
     # ------------------------------------------------------------------
     # journal (WAL)
@@ -336,15 +356,20 @@ class TxnEngine:
         with self._pub_lock:
             t0 = time.perf_counter()
             if self.fence is not None:
-                try:
-                    token = self.fence_token() if self.fence_token else None
-                    self.fence(token)
-                except Exception as e:
-                    self._abort(snap if snap is not None
-                                else self._pop_open(), e)
-                    raise TxnError("chunk write failed; transaction "
-                                   "rolled back") from e
-            self.stats.fence_wait_s += time.perf_counter() - t0
+                with self._span("epoch_fence"):
+                    try:
+                        token = self.fence_token() if self.fence_token \
+                            else None
+                        self.fence(token)
+                    except Exception as e:
+                        self._abort(snap if snap is not None
+                                    else self._pop_open(), e)
+                        self._count("kishu_txn_aborts_total", kind="fence")
+                        raise TxnError("chunk write failed; transaction "
+                                       "rolled back") from e
+            dt = time.perf_counter() - t0
+            self.stats.fence_wait_s += dt
+            self._observe("kishu_txn_fence_seconds", dt)
             rec, name, parts = snap if snap is not None else self._pop_open()
             if rec is None:
                 return
@@ -366,31 +391,38 @@ class TxnEngine:
                                     lease=self.lease)
             except (LeaseError, StaleHeadError) as e:
                 self._abort((rec, name, parts), e)
+                self._count("kishu_txn_aborts_total", kind="guard")
                 raise TxnError("publish refused: another writer owns this "
                                "branch; transaction rolled back") from e
             t0 = time.perf_counter()
-            rec["status"] = STATUS_PUBLISH
-            # the point of no return rides the atomic publish itself: the
-            # base record (first) flips the journal to roll-forward, then
-            # commit docs, then HEAD — one batch, one backend round-trip;
-            # a kill inside a decomposed batch still recovers, because the
-            # base lands before anything it publishes
-            batch = {name: {**rec, "chunks": []}}
-            batch.update(rec["docs"])
-            try:
-                self.store.put_meta_batch(batch)
-            except Exception as e:
-                # the group's docs are gone from memory and may be partly
-                # on disk; recovery finishes (or reverts) the job from the
-                # journal — but a LATER commit must never publish a child
-                # of a commit this failure lost, so the engine poisons
-                self._poisoned = e
-                raise TxnError("publish failed; journal left for "
-                               "recovery") from e
-            self.stats.journal_puts += 1
-            self._seal(name, parts)
+            with self._span("publish", commits=rec.get("n_commits", 0)):
+                rec["status"] = STATUS_PUBLISH
+                # the point of no return rides the atomic publish itself:
+                # the base record (first) flips the journal to roll-forward,
+                # then commit docs, then HEAD — one batch, one backend
+                # round-trip; a kill inside a decomposed batch still
+                # recovers, because the base lands before anything it
+                # publishes
+                batch = {name: {**rec, "chunks": []}}
+                batch.update(rec["docs"])
+                try:
+                    self.store.put_meta_batch(batch)
+                except Exception as e:
+                    # the group's docs are gone from memory and may be
+                    # partly on disk; recovery finishes (or reverts) the
+                    # job from the journal — but a LATER commit must never
+                    # publish a child of a commit this failure lost, so
+                    # the engine poisons
+                    self._poisoned = e
+                    raise TxnError("publish failed; journal left for "
+                                   "recovery") from e
+                self.stats.journal_puts += 1
+                self._seal(name, parts)
             self.stats.publishes += 1
-            self.stats.publish_s += time.perf_counter() - t0
+            dt = time.perf_counter() - t0
+            self.stats.publish_s += dt
+            self._observe("kishu_txn_publish_seconds", dt)
+            self._count("kishu_txn_publishes_total")
 
     # ------------------------------------------------------------------
     # lifecycle
@@ -573,7 +605,27 @@ def recover(store: ChunkStore) -> Dict[str, int]:
             out["chunks_dropped"] += store.delete_chunks(doomed)
         out["rolled_back"] += 1
         seal(base)
+    _note_recovery(out)
     return out
+
+
+def _note_recovery(out: Dict[str, int]) -> None:
+    """Attribute a recovery's work to the opening session's metrics (the
+    session activates its obs handle around graph construction)."""
+    if not (out["replayed"] or out["rolled_back"]):
+        return
+    try:
+        from repro import obs as obs_mod
+        o = obs_mod.active()
+        if o is None:
+            return
+        for kind in ("replayed", "rolled_back", "commits_published",
+                     "chunks_dropped"):
+            if out[kind]:
+                o.registry.counter("kishu_txn_recover_total",
+                                   kind=kind).inc(out[kind])
+    except Exception:  # noqa: BLE001 — observability must not fail recovery
+        pass
 
 
 # ---------------------------------------------------------------------------

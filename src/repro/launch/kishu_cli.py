@@ -103,6 +103,72 @@ def cmd_diff(graph: CheckpointGraph, args) -> int:
     return 0
 
 
+def cmd_stats_metrics(store, args) -> int:
+    """``stats --metrics``: Prometheus text exposition — live store gauges
+    (re-read through an InstrumentedStore, so the graph load itself is
+    timed) merged with every persisted session snapshot (``obs/trace/*``,
+    written by traced sessions on close)."""
+    from repro.obs import (TRACE_META_PREFIX, InstrumentedStore,
+                           MetricsRegistry, render)
+    reg = MetricsRegistry()
+    store = InstrumentedStore(store, reg)
+    graph = CheckpointGraph(store, recover=False)
+    reg.gauge("kishu_graph_commits").set(len(graph.nodes))
+    reg.gauge("kishu_graph_meta_bytes").set(graph.total_meta_bytes())
+    reg.gauge("kishu_store_chunks").set(store.n_chunks())
+    reg.gauge("kishu_store_chunk_bytes").set(store.chunk_bytes_total())
+    moved = sum(n.stats.get("bytes_serialized", 0)
+                for n in graph.nodes.values())
+    logical = sum(n.stats.get("bytes_logical", 0)
+                  for n in graph.nodes.values())
+    reg.gauge("kishu_ckpt_bytes_moved").set(moved)
+    reg.gauge("kishu_ckpt_bytes_logical").set(logical)
+    regs = [reg]
+    for name in sorted(store.list_meta(TRACE_META_PREFIX)):
+        doc = store.get_meta(name) or {}
+        snap = doc.get("metrics")
+        if snap:
+            sreg = MetricsRegistry.from_doc(snap)
+            sreg.const_labels.setdefault(
+                "sid", str(doc.get("sid", name.rsplit("/", 1)[-1])))
+            regs.append(sreg)
+    sys.stdout.write(render(regs))
+    return 0
+
+
+def cmd_trace(store, args) -> int:
+    """``kishu trace``: merge persisted span dumps into one Chrome
+    trace-event JSON (Perfetto / chrome://tracing loadable); one pid per
+    recorded session."""
+    import json
+
+    from repro.obs import TRACE_META_PREFIX, chrome_trace, spans_from_doc
+    names = sorted(store.list_meta(TRACE_META_PREFIX))
+    events, n_sessions = [], 0
+    for name in names:
+        doc = store.get_meta(name) or {}
+        spans = spans_from_doc(doc.get("spans", []))
+        if not spans:
+            continue
+        n_sessions += 1
+        events.extend(chrome_trace(spans, pid=n_sessions)["traceEvents"])
+    if not events:
+        print("trace: no persisted spans — run a session with "
+              "KISHU_TRACE=1 (or trace=True) and close it first",
+              file=sys.stderr)
+        return 1
+    text = json.dumps({"traceEvents": events, "displayTimeUnit": "ms"},
+                      indent=1)
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(text)
+        print(f"trace: {len(events)} events from {n_sessions} session(s) "
+              f"-> {args.out}", file=sys.stderr)
+    else:
+        print(text)
+    return 0
+
+
 def cmd_stats(store, graph: CheckpointGraph, args) -> int:
     print(f"commits      {len(graph.nodes)}")
     print(f"head         {graph.head}")
@@ -301,6 +367,9 @@ def cmd_kishud(store_uri: str, args) -> int:
     except OSError as e:
         print(f"kishud: no daemon on {args.socket} ({e})", file=sys.stderr)
         return 1
+    if args.action == "metrics" and resp.get("ok"):
+        sys.stdout.write(resp.get("metrics", ""))
+        return 0
     print(resp if args.action != "status"
           else "\n".join(f"{k:18s} {v}" for k, v in resp.items()))
     return 0 if resp.get("ok") else 1
@@ -343,7 +412,13 @@ def main(argv: Optional[list] = None) -> int:
     p = sub.add_parser("diff")
     p.add_argument("a")
     p.add_argument("b")
-    sub.add_parser("stats")
+    p = sub.add_parser("stats")
+    p.add_argument("--metrics", action="store_true",
+                   help="Prometheus text exposition instead of the "
+                        "human-readable summary")
+    p = sub.add_parser("trace")
+    p.add_argument("--out", help="write Chrome trace JSON here instead of "
+                                 "stdout (load in Perfetto)")
     p = sub.add_parser("verify")
     p.add_argument("--commit")
     p.add_argument("--deep", action="store_true")
@@ -358,7 +433,8 @@ def main(argv: Optional[list] = None) -> int:
                    help="force-drop a lease (operator override)")
     sub.add_parser("tenants")
     p = sub.add_parser("kishud")
-    p.add_argument("action", choices=["start", "stop", "status", "ping"])
+    p.add_argument("action", choices=["start", "stop", "status", "ping",
+                                      "metrics"])
     p.add_argument("--socket", default="/tmp/kishud.sock")
     p.add_argument("--detach", action="store_true",
                    help="start: run the daemon in its own process")
@@ -388,6 +464,12 @@ def main(argv: Optional[list] = None) -> int:
         return cmd_lease(store, args)
     if args.cmd == "tenants":
         return cmd_tenants(store, args)
+    # observability verbs: trace reads persisted span dumps (no graph);
+    # stats --metrics builds its own instrumented graph view
+    if args.cmd == "trace":
+        return cmd_trace(store, args)
+    if args.cmd == "stats" and args.metrics:
+        return cmd_stats_metrics(store, args)
     # fleet verbs operate on the store itself — no graph required
     if args.cmd == "topology":
         return cmd_topology(store, args)

@@ -28,7 +28,8 @@ or as a daemon with a unix-socket control plane::
     python -m repro.launch.kishu_cli --store ... kishud status --socket ...
 
 The control protocol is JSON-lines over a unix socket: one request object
-per line (``{"cmd": "ping" | "status" | "tenants" | "stop"}``), one
+per line (``{"cmd": "ping" | "status" | "tenants" | "metrics" |
+"stop"}``), one
 response object per line.
 """
 from __future__ import annotations
@@ -283,6 +284,29 @@ class Kishud:
                 "store_chunks": self.store.n_chunks(),
                 "store_bytes": self.store.chunk_bytes_total()}
 
+    def metrics_text(self) -> str:
+        """One Prometheus exposition covering the daemon (uptime, shared
+        cache, admission queue, store totals) and every live tenant
+        session's registry (store-op histograms, pipeline counters) —
+        sessions carry a ``tenant`` const-label, so one scrape
+        disambiguates the whole fleet."""
+        from repro.obs import MetricsRegistry, render
+
+        reg = MetricsRegistry()
+        st = self.status()
+        reg.gauge("kishud_uptime_seconds").set(st["uptime_s"])
+        reg.gauge("kishud_sessions").set(st["n_sessions"])
+        reg.gauge("kishud_cache_bytes").set(st["cache_bytes"])
+        reg.gauge("kishud_cache_hits_total").set(st["cache_hits"])
+        reg.gauge("kishud_cache_misses_total").set(st["cache_misses"])
+        reg.gauge("kishud_store_chunks").set(st["store_chunks"])
+        reg.gauge("kishud_store_bytes").set(st["store_bytes"])
+        for k, v in st["queue"].items():
+            reg.gauge(f"kishud_queue_{k}").set(float(v))
+        with self._lock:
+            live = list(self._sessions.values())
+        return render([reg] + [ts.session.obs.registry for ts in live])
+
     def tenants(self) -> List[dict]:
         """Per-tenant usage as seen by the live sessions, plus every lease
         visible on the store (sessions opened elsewhere included)."""
@@ -342,6 +366,8 @@ class KishudServer:
                       for doc in lease_status(view)]
             return {"ok": True, "tenants": self.daemon.tenants(),
                     "leases": leases}
+        if cmd == "metrics":
+            return {"ok": True, "metrics": self.daemon.metrics_text()}
         if cmd == "stop":
             self.stopped.set()
             return {"ok": True, "stopping": True}

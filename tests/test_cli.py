@@ -121,3 +121,24 @@ def test_every_subcommand_accepts_uri(any_store_uri, capsys):
     assert "would drop 0" in capsys.readouterr().out
     assert cli(["--store", uri, "topology"]) == 0
     assert cli(["--store", uri, "scrub"]) == 0
+
+
+def test_trace_without_spans_exits_nonzero(tmp_path, capsys):
+    uri = f"dir://{tmp_path}/cas"
+    _build_history(uri)         # untraced session: no obs/trace/* docs
+    assert cli(["--store", uri, "trace"]) == 1
+    assert "no persisted spans" in capsys.readouterr().err
+
+
+def test_stats_metrics_on_every_uri(any_store_uri, capsys):
+    import re
+    uri, _ = any_store_uri
+    assert cli(["--store", uri, "stats", "--metrics"]) == 0
+    out = capsys.readouterr().out
+    line = re.compile(r"^(# (TYPE|HELP) .*|"
+                      r"[a-zA-Z_:][a-zA-Z0-9_:]*(\{[^}]*\})? [-+0-9.e]+)$")
+    for ln in out.splitlines():
+        if ln:
+            assert line.match(ln), f"bad exposition line: {ln!r}"
+    m = re.search(r"^kishu_graph_commits (\d+)$", out, re.M)
+    assert m and int(m.group(1)) >= 2
