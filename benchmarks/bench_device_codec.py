@@ -1,0 +1,276 @@
+"""Closed PCIe loop: on-device codec (write) + fused scatter (checkout).
+
+The workload is compressible jax int32 device arrays (values < 2**7, so
+24+ of every word's 32 bit-planes are constant) mutated in-place so that
+~``dirty_frac`` of each co-variable's chunks change per cell.  ``mode``:
+
+  host   — every device feature off: detection hashes host-side and the
+           full array crosses the PCIe boundary each commit.
+  device — ``KISHU_DEVICE_DELTA=1`` only: the fused delta pack ships raw
+           compacted dirty rows device→host; checkout patches with the
+           per-chunk ``dynamic_update_slice`` loop (the DUS baseline).
+  codec  — ``KISHU_DEVICE_CODEC=1 KISHU_DEVICE_SCATTER=1`` on top: dirty
+           rows are bitshuffle/RLE-encoded *on device* so only bit-plane
+           payloads + masks cross PCIe (WriteStats.bytes_dev2host), and
+           checkout uploads compacted rows once and scatters every dirty
+           chunk of a co-variable in one Pallas pass
+           (CheckoutStats.covs_scattered / bytes_host2dev).
+
+Every configuration must restore bit-identical states AND produce the
+same sorted content-addressed chunk keys (CAS keys stay logical-byte no
+matter how chunks are stored).  The 10%-dirty codec rows must show
+device→host traffic ≤ 0.05 of the logical array size, and the fused
+scatter's p50 checkout latency must not regress past the DUS baseline —
+the acceptance bars ``run.py --smoke-device-codec`` asserts in CI.
+Rows feed ``BENCH_device_codec.json``.
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+from typing import List
+
+from repro.configs.xla_flags import apply_xla_tuning
+
+apply_xla_tuning()      # opt-in ($KISHU_XLA_TUNING=1), no-op on CPU
+
+MODES = ("host", "device", "codec_dus", "codec")
+DIRTY_FRACS = (0.10, 0.50)
+
+_ENV_KEYS = ("KISHU_DEVICE_DELTA", "KISHU_DEVICE_HASH",
+             "KISHU_DEVICE_CODEC", "KISHU_DEVICE_SCATTER")
+# codec_dus isolates the checkout-side change: same on-device encode and
+# same stored frames as "codec", but patches through the per-chunk DUS
+# loop — the honest latency baseline for the fused scatter.
+#              delta hash codec scatter
+_ENV = {
+    "host":      ("0", "0", "0", "0"),
+    "device":    ("1", "1", "0", "0"),
+    "codec_dus": ("1", "1", "1", "0"),
+    "codec":     ("1", "1", "1", "1"),
+}
+
+
+def _make_store(backend: str, tmp: str, tag: str):
+    from repro.core import MemoryStore
+    from repro.core.chunkstore import DirectoryStore, SQLiteStore
+    if backend == "memory":
+        return MemoryStore()
+    if backend == "dir":
+        return DirectoryStore(os.path.join(tmp, f"dir_{tag}"))
+    return SQLiteStore(os.path.join(tmp, f"cas_{tag}.db"))
+
+
+def _p50(xs: List[float]) -> float:
+    xs = sorted(xs)
+    return xs[(len(xs) - 1) // 2] if xs else 0.0
+
+
+def _run_one(backend: str, mode: str, dirty_frac: float, tmp: str, *,
+             n_covs: int, elems: int, chunk_bytes: int, repeats: int):
+    """One (backend, mode, dirty_frac) cell: returns (row, states, keys)."""
+    import time
+
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.core import KishuSession
+
+    for k, v in zip(_ENV_KEYS, _ENV[mode]):
+        os.environ[k] = v
+
+    elem_bytes = 4
+    chunks_per_cov = -(-elems * elem_bytes // chunk_bytes)
+    dirty_chunks = max(1, int(round(chunks_per_cov * dirty_frac)))
+    chunk_elems = chunk_bytes // elem_bytes
+    touch = np.arange(dirty_chunks, dtype=np.int64) * chunk_elems
+
+    tag = f"{backend}_{mode}_{dirty_frac:g}"
+    store = _make_store(backend, tmp, tag)
+    sess = KishuSession(store, chunk_bytes=chunk_bytes, cache_bytes=0)
+
+    def init(ns, seed):
+        # values < 2**7: bit-planes 7..31 of every int32 word are all-zero,
+        # the shape the bitshuffle codec is built for
+        for i in range(n_covs):
+            ns[f"v{i:02d}"] = (jnp.arange(elems, dtype=jnp.int32)
+                               * (seed + i)) % 97
+
+    def mutate(ns, seed):
+        vals = jnp.full((dirty_chunks,), seed % 89, jnp.int32)
+        for i in range(n_covs):
+            ns[f"v{i:02d}"] = ns[f"v{i:02d}"].at[touch].set(vals + i)
+
+    sess.register("init", init)
+    sess.register("mutate", mutate)
+    sess.init_state({})
+    sess.run("init", seed=1)
+
+    d2h = serialized = logical = encoded = skipped = fallbacks = 0
+    commits = []
+    for r in range(repeats):
+        commits.append(sess.run("mutate", seed=100 + r))
+        w = sess.last_run.write
+        d2h += w.bytes_dev2host
+        serialized += w.bytes_serialized
+        logical += w.bytes_logical
+        encoded += w.chunks_encoded
+        skipped += w.chunks_codec_skipped
+        fallbacks += w.kernel_fallbacks
+
+    # restored states + the content-addressed chunk keys are the
+    # bit-identity witnesses compared across modes.  The first pass over
+    # the commits is the untimed warmup (jit compiles of the scatter /
+    # DUS patch kernels land here) and captures the witness states; the
+    # second pass re-walks the same commits for the latency samples.
+    states = {}
+    patched = scattered = h2d = 0
+    patch_wall: List[float] = []
+    for cid in commits:
+        cstats = sess.checkout(cid)
+        patched += cstats.covs_patched
+        scattered += cstats.covs_scattered
+        h2d += cstats.bytes_host2dev
+        states[len(states)] = {n: np.asarray(sess.ns[n]).tobytes()
+                               for n in sess.ns.names()}
+    for cid in commits:
+        t0 = time.perf_counter()
+        cstats = sess.checkout(cid)
+        patch_wall.append(time.perf_counter() - t0)
+        patched += cstats.covs_patched
+        scattered += cstats.covs_scattered
+        h2d += cstats.bytes_host2dev
+    keys = sorted(store.list_chunk_keys())
+    sess.close()
+
+    # host mode moves the full array device→host per detection pass
+    traffic = d2h if mode != "host" else logical
+    row = {
+        "bench": "device_codec", "backend": backend, "mode": mode,
+        "dirty_frac": dirty_frac,
+        "bytes_dev2host": traffic,
+        "bytes_logical": logical,
+        "traffic_ratio": round(traffic / logical, 4) if logical else None,
+        "bytes_serialized": serialized,
+        "bytes_host2dev": h2d,
+        "chunks_encoded": encoded,
+        "chunks_codec_skipped": skipped,
+        "covs_patched": patched,
+        "covs_scattered": scattered,
+        "kernel_fallbacks": fallbacks,
+        "checkout_p50_s": round(_p50(patch_wall), 5),
+    }
+    return row, states, keys
+
+
+def run(n_covs: int = 2, elems: int = 1 << 16, chunk_bytes: int = 1 << 12,
+        repeats: int = 3, backends=("memory", "sqlite"),
+        dirty_fracs=DIRTY_FRACS) -> List[dict]:
+    saved = {k: os.environ.get(k) for k in _ENV_KEYS}
+    rows: List[dict] = []
+    tmp = tempfile.mkdtemp(prefix="kishu_devcodec_")
+    try:
+        for backend in backends:
+            for frac in dirty_fracs:
+                per_mode = {}
+                for mode in MODES:
+                    row, states, keys = _run_one(
+                        backend, mode, frac, tmp, n_covs=n_covs,
+                        elems=elems, chunk_bytes=chunk_bytes,
+                        repeats=repeats)
+                    per_mode[mode] = (row, states, keys)
+                _, h_states, h_keys = per_mode["host"]
+                identical = all(
+                    per_mode[m][1] == h_states and per_mode[m][2] == h_keys
+                    for m in MODES)
+                for mode in MODES:
+                    per_mode[mode][0]["identical"] = identical
+                    rows.append(per_mode[mode][0])
+    finally:
+        shutil.rmtree(tmp, ignore_errors=True)
+        for k, v in saved.items():       # never leak the forced env
+            if v is None:
+                os.environ.pop(k, None)
+            else:
+                os.environ[k] = v
+    return rows
+
+
+def smoke() -> List[dict]:
+    """CI gate (CPU interpreter path): the codec must engage and beat the
+    0.05 PCIe-traffic bar at 10% dirty, the fused scatter must cover every
+    patched co-variable in one pass without regressing past the DUS
+    baseline, and every mode must stay bit-identical on every backend."""
+    rows = run(n_covs=2, elems=1 << 14, chunk_bytes=1 << 12, repeats=2)
+    assert all(r["identical"] for r in rows), \
+        "codec/scatter path not bit-identical to host path"
+    codec = [r for r in rows if r["mode"] == "codec"]
+    assert codec and all(r["chunks_encoded"] > 0 for r in codec), \
+        "device codec never engaged on the codec path"
+    for r in codec:
+        if r["dirty_frac"] <= 0.10:
+            assert r["traffic_ratio"] is not None \
+                and r["traffic_ratio"] <= 0.05, (
+                    f"{r['backend']}@{r['dirty_frac']}: device→host ratio "
+                    f"{r['traffic_ratio']} > 0.05")
+        assert r["covs_patched"] > 0 \
+            and r["covs_scattered"] == r["covs_patched"], (
+                f"{r['backend']}@{r['dirty_frac']}: "
+                f"{r['covs_scattered']}/{r['covs_patched']} patched covs "
+                f"went through the fused scatter")
+        assert r["bytes_host2dev"] > 0, "host→device accounting missing"
+    # p50 latency: one fused scatter per cov must not regress past the
+    # per-chunk DUS loop reading the same stored frames (1.5x headroom
+    # absorbs CPU timer jitter in CI)
+    by_cell = {}
+    for r in rows:
+        by_cell.setdefault((r["backend"], r["dirty_frac"]),
+                           {})[r["mode"]] = r
+    for (backend, frac), cell in by_cell.items():
+        dus, sc = cell["codec_dus"]["checkout_p50_s"], \
+            cell["codec"]["checkout_p50_s"]
+        assert sc <= max(dus * 1.5, dus + 0.005), (
+            f"{backend}@{frac}: scatter checkout p50 {sc}s regressed past "
+            f"DUS baseline {dus}s")
+
+    # pallas-kernel parity on the interpreter (the TPU kernels themselves,
+    # not just the jnp refs the auto probe lands on under CPU)
+    import jax.numpy as jnp
+    import numpy as np
+
+    from repro.kernels.delta_codec import host as codec_host
+    from repro.kernels.delta_codec.kernel import codec_encode_pallas
+    from repro.kernels.delta_codec.host import (frames_from_encoded,
+                                                bitplane_decompress,
+                                                _FRAME_HDR)
+    from repro.kernels.patch_scatter.kernel import patch_scatter_pallas
+
+    rng = np.random.default_rng(11)
+    rows_np = (rng.integers(0, 97, (8, 256), dtype=np.int64)
+               .astype(np.uint32))
+    gw = 256
+    masks, count, planes = codec_encode_pallas(
+        jnp.asarray(rows_np), gw=gw, interpret=True)
+    n = int(np.asarray(count)[0, 0])
+    frames = frames_from_encoded(
+        np.asarray(masks), np.asarray(planes)[:n], 1, gw,
+        [gw * 4] * rows_np.shape[0])
+    for i in range(rows_np.shape[0]):
+        want = rows_np[i].tobytes()
+        assert codec_host.bitplane_compress(want) == frames[i][_FRAME_HDR:]
+        assert bitplane_decompress(frames[i][_FRAME_HDR:]) == want
+
+    words = jnp.asarray(rng.integers(0, 2**32, (16, 64), dtype=np.uint64)
+                        .astype(np.uint32))
+    new_rows = jnp.asarray(rng.integers(0, 2**32, (3, 64), dtype=np.uint64)
+                           .astype(np.uint32))
+    idx = jnp.asarray([1, 7, 14], jnp.int32)
+    want_np = np.asarray(words).copy()
+    want_np[[1, 7, 14]] = np.asarray(new_rows)
+    got = patch_scatter_pallas(words, idx, new_rows, interpret=True)
+    assert np.array_equal(np.asarray(got), want_np)
+    rows.append({"bench": "device_codec", "backend": "-",
+                 "mode": "pallas_interpret", "dirty_frac": None,
+                 "identical": True, "chunks_encoded": rows_np.shape[0]})
+    return rows

@@ -127,6 +127,21 @@ def bench_device_delta(quick: bool):
     return rows
 
 
+def bench_device_codec(quick: bool):
+    """Closed PCIe loop: on-device bitshuffle codec (write) + fused
+    device-scatter checkout vs the raw fused pipeline and the host path,
+    bit-identity + logical CAS keys across backends.  Writes
+    BENCH_device_codec.json."""
+    from benchmarks import bench_device_codec as b
+    if quick:
+        rows = b.run(n_covs=2, elems=1 << 14, chunk_bytes=1 << 12,
+                     repeats=2, backends=("memory",))
+    else:
+        rows = b.run()
+    _write_bench_json("BENCH_device_codec.json", rows)
+    return rows
+
+
 def bench_obs(quick: bool):
     """Observability plane: tracing-on vs tracing-off commit+checkout
     latency on sqlite (overhead budget < 3%), Chrome-trace export contract
@@ -199,6 +214,7 @@ ALL = {
     "ckpt_io": bench_ckpt_io,
     "delta": bench_delta,
     "device_delta": bench_device_delta,
+    "device_codec": bench_device_codec,
     "fabric": bench_fabric,
     "txn": bench_txn,
     "multi": bench_multi,
@@ -222,6 +238,11 @@ def main() -> None:
                     help="fast CI gate: fused on-device delta pipeline — "
                          "traffic-ratio + bit-identity assertions on the "
                          "CPU interpreter path + BENCH_device_delta.json")
+    ap.add_argument("--smoke-device-codec", action="store_true",
+                    help="fast CI gate: on-device codec + fused scatter "
+                         "checkout — PCIe-traffic ratio, one-pass-per-cov "
+                         "and bit-identity assertions on the CPU "
+                         "interpreter path + BENCH_device_codec.json")
     ap.add_argument("--smoke-fabric", action="store_true",
                     help="fast CI gate: storage-fabric scatter-gather "
                          "speedup + replica-loss restore assertions + "
@@ -252,6 +273,13 @@ def main() -> None:
         _print_rows(rows)
         _write_bench_json("BENCH_device_delta.json", rows)
         print("# device delta smoke OK", flush=True)
+        return
+    if args.smoke_device_codec:
+        from benchmarks import bench_device_codec as b
+        rows = b.smoke()        # raises AssertionError on regression
+        _print_rows(rows)
+        _write_bench_json("BENCH_device_codec.json", rows)
+        print("# device codec smoke OK", flush=True)
         return
     if args.smoke_fabric:
         from benchmarks import bench_fabric as b

@@ -45,6 +45,10 @@ class CheckoutStats:
     bytes_logical: int = 0          # logical size of restored co-variables
     chunks_patched: int = 0         # dirty chunks fetched + patched in
     chunks_inplace: int = 0         # clean chunks reused from the live buffer
+    bytes_host2dev: int = 0         # host→device bytes patch uploads moved
+                                    # (mirror of WriteStats.bytes_dev2host)
+    covs_scattered: int = 0         # device covs patched in one fused
+                                    # scatter pass (kernels/patch_scatter)
     kernel_fallbacks: int = 0       # device-kernel → host degradations
     wall_s: float = 0.0
     diff_s: float = 0.0
@@ -474,10 +478,18 @@ class StateLoader:
         demoted: List[Tuple[CovKey, str]] = []
         for p in patches:
             chunks = p.manifest["base"]["chunks"]
-            bad = any(chunks[i]["key"] not in got
-                      or len(got[chunks[i]["key"]]) != int(chunks[i]["n"])
-                      for i in p.dirty)
+            bad = [i for i in p.dirty
+                   if chunks[i]["key"] not in got
+                   or len(got[chunks[i]["key"]]) != int(chunks[i]["n"])]
             if bad:
+                # demotion is a degradation like any other: log-once + bump
+                # the per-session fallback counter instead of going silent
+                delta_mod.note_kernel_fallback(
+                    "fetch_patch_chunks",
+                    ChunkMissingError(
+                        f"{key_str(p.key)}@{p.version}: {len(bad)} patch "
+                        f"chunk(s) missing/short (first: "
+                        f"{chunks[bad[0]]['key']})"))
                 demoted.append((p.key, p.version))
             else:
                 ok_patches.append(p)
@@ -492,7 +504,20 @@ class StateLoader:
         chunks = base_info["chunks"]
         segs = [(p.offsets[i], got[chunks[i]["key"]]) for i in p.dirty]
         if p.is_device:
-            new_base = delta_mod.patch_device_array(p.base, segs)
+            # fused scatter first: one compacted upload + one kernel pass
+            # for ALL dirty chunks of this co-variable; falls back to the
+            # per-chunk dynamic_update_slice loop (same bytes, K dispatches)
+            chunk_bytes = int(chunks[0]["n"]) if len(chunks) > 1 else 0
+            fused = delta_mod.patch_device_chunks(p.base, segs, chunk_bytes)
+            if fused is not None:
+                new_base, moved = fused
+                if stats:
+                    stats.covs_scattered += 1
+                    stats.bytes_host2dev += moved
+            else:
+                new_base = delta_mod.patch_device_array(p.base, segs)
+                if stats:
+                    stats.bytes_host2dev += sum(len(d) for _, d in segs)
             values = {m["name"]: new_base for m in p.manifest["members"]}
         else:
             delta_mod.patch_numpy_base(p.base, segs)
@@ -542,7 +567,8 @@ class StateLoader:
                 try:
                     loaded[p.key] = self._apply_patch(p, patch_data, stats,
                                                       tracked_ns.base)
-                except Exception:  # noqa: BLE001 — corrupt patch: reload
+                except Exception as e:  # noqa: BLE001 — corrupt patch:
+                    delta_mod.note_kernel_fallback("apply_patch", e)
                     loaded[p.key] = self.load_cov(p.key, p.version, stats)
 
         # 4. swap into the namespace (tracking paused: checkout is not access)

@@ -47,6 +47,9 @@ class WriteStats:
     covs_delta: int = 0             # covs written via the dirty-range path
     covs_packed: int = 0            # subset served by the fused device pack
     bytes_dev2host: int = 0         # device→host bytes the pack(s) moved
+    chunks_encoded: int = 0         # chunks compressed on device (bit-plane
+                                    # frames crossed PCIe, not raw rows)
+    chunks_codec_skipped: int = 0   # probe said incompressible → raw
     kernel_fallbacks: int = 0       # device-kernel → host degradations
     unserializable: int = 0
     wall_s: float = 0.0
@@ -74,7 +77,8 @@ def _pack_usable(pack, det_hex: List[str], dirty_set, n: int,
 
 def _try_delta_manifest(base, det_hex: List[str], prev_manifest,
                         chunk_bytes: int, stats: WriteStats,
-                        put, has, members, pack=None) -> Optional[dict]:
+                        put, has, members, pack=None,
+                        put_stored=None) -> Optional[dict]:
     """Dirty-range fast path: when the previous manifest matches this base
     structurally, compare detection hashes *first* and serialize only the
     dirty byte ranges — the full blob is never built and device→host
@@ -121,10 +125,16 @@ def _try_delta_manifest(base, det_hex: List[str], prev_manifest,
                          "n": prev_chunks[i]["n"]}
             stats.chunks_reused += 1
 
-    def _store(i: int, cdata) -> None:
+    def _store(i: int, cdata, frame=None) -> None:
+        # the key is ALWAYS over the logical bytes — codec frames are a
+        # storage representation, invisible to dedup and manifests
         ck = chunk_key(cdata)
         if has(ck):
             stats.chunks_dedup += 1
+        elif frame is not None and put_stored is not None:
+            put_stored(ck, cdata, frame)
+            stats.chunks_written += 1
+            stats.bytes_written += len(frame)
         else:
             put(ck, cdata)
             stats.chunks_written += 1
@@ -134,12 +144,22 @@ def _try_delta_manifest(base, det_hex: List[str], prev_manifest,
     if use_pack:
         # fused device path: dirty chunks come out of the kernel's
         # compacted buffer — the puts above enqueue into the (possibly
-        # async) writer while read_chunks keeps the *next* segment's
-        # device→host DMA in flight (DESIGN.md §15)
+        # async) writer while the reader keeps the *next* segment's
+        # device→host DMA in flight (DESIGN.md §15).  With the on-device
+        # codec engaged the rows cross PCIe as bit-plane frames and are
+        # stored as-is (put_stored); keys stay logical-byte either way.
         stats.covs_packed += 1
-        for i, cdata in pack.read_chunks(dirty):
-            stats.bytes_serialized += len(cdata)
-            _store(i, cdata)
+        enc0, skip0 = pack.codec_chunks_encoded, pack.codec_chunks_skipped
+        if put_stored is not None:
+            for i, cdata, frame in pack.read_chunks_encoded(dirty):
+                stats.bytes_serialized += len(cdata)
+                _store(i, cdata, frame)
+        else:
+            for i, cdata in pack.read_chunks(dirty):
+                stats.bytes_serialized += len(cdata)
+                _store(i, cdata)
+        stats.chunks_encoded += pack.codec_chunks_encoded - enc0
+        stats.chunks_codec_skipped += pack.codec_chunks_skipped - skip0
         stats.bytes_dev2host += pack.bytes_transferred
     else:
         for start, stop in delta_mod.coalesce(dirty):
@@ -163,7 +183,9 @@ def build_manifest(store: ChunkStore, key: CovKey,
                    put: Callable[[str, bytes], None],
                    has: Optional[Callable[[str], bool]] = None,
                    delta_ranges: bool = True,
-                   packs: Optional[Dict[int, Any]] = None) -> dict:
+                   packs: Optional[Dict[int, Any]] = None,
+                   put_stored: Optional[Callable[[str, bytes, bytes],
+                                                 None]] = None) -> dict:
     """Serialize one co-variable into a manifest + chunk puts.
 
     ``has`` is the CAS-dedup membership test; the writer passes a variant
@@ -191,7 +213,8 @@ def build_manifest(store: ChunkStore, key: CovKey,
     if delta_ranges:
         man = _try_delta_manifest(base, det_hex, prev_manifest, chunk_bytes,
                                   stats, put, has, members,
-                                  pack=(packs or {}).get(id(base)))
+                                  pack=(packs or {}).get(id(base)),
+                                  put_stored=put_stored)
         if man is not None:
             return man
 
@@ -271,7 +294,8 @@ class CheckpointWriter:
         # threads, and off-thread work genuinely is off the commit path
         self.obs = None
         self._q: "queue.Queue" = queue.Queue()
-        self._batch: List[Tuple[str, bytes]] = []     # sync-mode delta batch
+        # sync-mode delta batch: (key, bytes, stored-form flag)
+        self._batch: List[Tuple[str, bytes, bool]] = []
         self._batch_keys: set = set()
         self._worker: Optional[threading.Thread] = None
         self._errors: List[Exception] = []
@@ -307,7 +331,7 @@ class CheckpointWriter:
                 journaled = True
                 if self.journal is not None:
                     try:        # WAL the keys BEFORE the backend put
-                        self.journal([ck for ck, _ in batch])
+                        self.journal([ck for ck, _, _ in batch])
                     except Exception as e:  # noqa: BLE001
                         journaled = False   # unjournaled chunks must not
                         self._errors.append(e)  # land: rollback couldn't
@@ -315,17 +339,20 @@ class CheckpointWriter:
                 if journaled:
                     try:
                         with self._span("put_chunks", n=len(batch)):
-                            self.store.put_chunks(batch)
+                            self._put_batch(batch)
                     except Exception:  # noqa: BLE001
                         # batch op failed somewhere: degrade to per-chunk
                         # puts so one bad chunk doesn't drop its whole batch
-                        for ck, data in batch:
+                        for ck, data, stored in batch:
                             try:
-                                self.store.put_chunk(ck, data)
+                                if stored:
+                                    self.store.put_chunk_stored(ck, data)
+                                else:
+                                    self.store.put_chunk(ck, data)
                             except Exception as e:  # noqa: BLE001
                                 self._errors.append(e)
             finally:
-                for ck, _ in batch:
+                for ck, _, _ in batch:
                     self.pending_keys.discard(ck)
                 for _ in batch:
                     self._q.task_done()
@@ -335,19 +362,42 @@ class CheckpointWriter:
             if saw_sentinel:
                 return
 
-    def _put(self, ck: str, data: bytes) -> None:
-        if self.cache is not None:
-            self.cache.put(ck, bytes(data))
+    def _put_batch(self, batch: List[Tuple[str, bytes, bool]]) -> None:
+        """Land one mixed batch: raw chunks through ``put_chunks`` (codec
+        wrappers encode them), device-encoded frames through
+        ``put_chunks_stored`` (already frames — re-encoding would
+        double-frame)."""
+        raw = [(ck, d) for ck, d, stored in batch if not stored]
+        pre = [(ck, d) for ck, d, stored in batch if stored]
+        if raw:
+            self.store.put_chunks(raw)
+        if pre:
+            self.store.put_chunks_stored(pre)
+
+    def _enqueue(self, ck: str, data: bytes, stored: bool) -> None:
         with self._cv:
             self._enqueued += 1
         if self.async_write:
             self.pending_keys.add(ck)
-            self._q.put((ck, bytes(data)))
+            self._q.put((ck, bytes(data), stored))
         else:
-            self._batch.append((ck, bytes(data)))
+            self._batch.append((ck, bytes(data), stored))
             self._batch_keys.add(ck)
             if len(self._batch) >= self.drain_batch:
                 self._flush_batch()      # bound buffered delta memory
+
+    def _put(self, ck: str, data: bytes) -> None:
+        if self.cache is not None:
+            self.cache.put(ck, bytes(data))
+        self._enqueue(ck, data, stored=False)
+
+    def _put_stored(self, ck: str, logical: bytes, frame: bytes) -> None:
+        """Store a device-encoded chunk: the *frame* goes to the backend,
+        the *logical* bytes feed the shared cache (checkout must see
+        logical bytes, same as a backend read after transparent decode)."""
+        if self.cache is not None:
+            self.cache.put(ck, bytes(logical))
+        self._enqueue(ck, frame, stored=True)
 
     def _span(self, name: str, **args):
         return self.obs.span(name, **args) if self.obs is not None \
@@ -363,9 +413,9 @@ class CheckpointWriter:
                 # WAL before the puts; a journal failure aborts the batch
                 # (the exception propagates to run()) so no chunk ever
                 # lands unjournaled
-                self.journal([ck for ck, _ in batch])
+                self.journal([ck for ck, _, _ in batch])
             with self._span("put_chunks", n=len(batch)):
-                self.store.put_chunks(batch)
+                self._put_batch(batch)
         finally:
             # the batch leaves the pipeline on ANY outcome — journal
             # failures included — or a later epoch fence would wait forever
@@ -410,7 +460,8 @@ class CheckpointWriter:
                                      self.chunk_bytes, prev_manifest_of(key),
                                      stats, self._put, self._has,
                                      delta_ranges=self.delta_ranges,
-                                     packs=packs)
+                                     packs=packs,
+                                     put_stored=self._put_stored)
                 manifests[key_str(key)] = man
         self._flush_batch()                  # sync mode: durable on return
         if self.async_write and self.write_deadline_s:

@@ -59,6 +59,10 @@ class ChunkCodec:
     name: str
     compress: Callable[[bytes], bytes]
     decompress: Callable[[bytes], bytes]
+    # optional sampled pre-check: False -> data judged incompressible, the
+    # encode is skipped entirely and the chunk stored raw (the skip is what
+    # WriteStats.chunks_codec_skipped counts)
+    probe: Optional[Callable[[bytes], bool]] = None
 
 
 def _build_codecs() -> Dict[int, ChunkCodec]:
@@ -73,6 +77,17 @@ def _build_codecs() -> Dict[int, ChunkCodec]:
     try:
         import lz4.frame as _lz4
         out[3] = ChunkCodec(3, "lz4", _lz4.compress, _lz4.decompress)
+    except Exception:  # noqa: BLE001
+        pass
+    try:
+        # bit-plane codec (kernels/delta_codec): the host half is pure
+        # numpy, so registering it here keeps every backend/CLI able to
+        # decode device-encoded frames without an accelerator stack
+        from repro.kernels.delta_codec import host as _bshuf
+        out[_bshuf.CODEC_ID] = ChunkCodec(
+            _bshuf.CODEC_ID, _bshuf.CODEC_NAME,
+            _bshuf.bitplane_compress, _bshuf.bitplane_decompress,
+            probe=_bshuf.bitplane_probe)
     except Exception:  # noqa: BLE001
         pass
     return out
@@ -114,7 +129,7 @@ def encode_chunk(data: bytes, codec: Optional[ChunkCodec]) -> bytes:
     Raw data that happens to *begin with the magic* is escaped into a
     "stored" frame (codec id 0) so decoding stays unambiguous — without
     this, such a chunk would be misparsed as a frame on read."""
-    if codec is not None:
+    if codec is not None and (codec.probe is None or codec.probe(data)):
         comp = codec.compress(data)
         if len(comp) + _FRAME_HDR < len(data):
             return (CHUNK_MAGIC + bytes([codec.codec_id])
@@ -313,6 +328,25 @@ class ChunkStore:
             if self.put_chunk(k, d):
                 written += 1
         return written
+
+    # ---- stored-form puts (device-encoded frames) ----
+    #
+    # ``data`` is already a KZC1 codec frame whose key was computed over the
+    # *logical* bytes (the on-device codec emits frames directly, so the raw
+    # bytes never exist on the host).  The base default just stores the
+    # bytes verbatim — correct for every raw backend, since reads decode
+    # frames transparently — while codec wrappers override these to bypass
+    # re-encoding (double-framing would corrupt the chunk: one decode would
+    # yield the inner frame, not the logical bytes).
+
+    def put_chunk_stored(self, key: str, data: bytes) -> bool:
+        return self.put_chunk(key, data)
+
+    def put_chunks_stored(self, pairs: Sequence[Tuple[str, bytes]]) -> int:
+        # delegating to put_chunks keeps the backend's native batching
+        # (sqlite transactions, fabric scatter); only wrappers that
+        # *transform* data on put (CompressedStore) must override
+        return self.put_chunks(pairs)
 
     def list_chunk_keys(self) -> List[str]:
         """All chunk keys currently stored (GC / fsck enumeration)."""
@@ -775,9 +809,15 @@ class CompressedStore(ChunkStore):
         self.native_scatter = getattr(inner, "native_scatter", False)
         self.logical_put_bytes = 0
         self.stored_put_bytes = 0
+        self.chunks_codec_skipped = 0     # probe said "incompressible"
 
     def _encode(self, data: bytes) -> bytes:
-        enc = encode_chunk(data, self.codec)
+        codec = self.codec
+        if codec is not None and codec.probe is not None \
+                and not codec.probe(data):
+            self.chunks_codec_skipped += 1
+            codec = None                  # probe veto: store raw
+        enc = encode_chunk(data, codec)
         self.logical_put_bytes += len(data)
         self.stored_put_bytes += len(enc)
         return enc
@@ -787,6 +827,17 @@ class CompressedStore(ChunkStore):
 
     def put_chunks(self, pairs):
         return self.inner.put_chunks([(k, self._encode(d)) for k, d in pairs])
+
+    # device-encoded frames are already in stored form: re-encoding would
+    # double-frame them (a decode would then yield the inner frame, not the
+    # logical bytes) — bypass the codec, keep the byte accounting honest
+    def put_chunk_stored(self, key, data):
+        self.stored_put_bytes += len(data)
+        return self.inner.put_chunk_stored(key, data)
+
+    def put_chunks_stored(self, pairs):
+        self.stored_put_bytes += sum(len(d) for _, d in pairs)
+        return self.inner.put_chunks_stored(pairs)
 
     def get_chunk(self, key):
         return self.inner.get_chunk(key)
@@ -899,6 +950,12 @@ class NamespacedStore(ChunkStore):
 
     def put_chunks(self, pairs):
         return self.inner.put_chunks(pairs)
+
+    def put_chunk_stored(self, key, data):
+        return self.inner.put_chunk_stored(key, data)
+
+    def put_chunks_stored(self, pairs):
+        return self.inner.put_chunks_stored(pairs)
 
     def get_chunk(self, key):
         return self.inner.get_chunk(key)

@@ -217,6 +217,66 @@ def patch_numpy_base(base: np.ndarray, segs: Sequence[Tuple[int, bytes]]
     return base
 
 
+def patch_device_chunks(base: Any, segs: Sequence[Tuple[int, bytes]],
+                        chunk_bytes: int) -> Optional[Tuple[Any, int]]:
+    """Fused checkout scatter: upload all dirty chunks of a device array as
+    one compacted buffer and land them in a single Pallas pass
+    (kernels/patch_scatter) — the mirror image of ``device_delta_pack``.
+
+    Returns ``(patched array, bytes moved host→device)``, or ``None``
+    whenever the fused path doesn't apply — host array, PRNG key,
+    non-chunk-aligned segments, unsupported dtype, codec/env veto, or no
+    working backend — and the caller degrades to the per-chunk
+    ``patch_device_array`` loop below.  Only engaged off-CPU by default
+    (interpret-mode dispatch loses to the jnp loop on CPU); override with
+    ``KISHU_DEVICE_SCATTER=1/0``.
+    """
+    if not segs or chunk_bytes <= 0 or chunk_bytes % 4:
+        return None
+    env = os.environ.get("KISHU_DEVICE_SCATTER", "").strip()
+    if env == "0":
+        return None
+    import jax
+
+    from repro.core.serialize import is_prng_key
+
+    if env != "1" and jax.default_backend() == "cpu":
+        return None
+    if not isinstance(base, jax.Array) or is_prng_key(base):
+        return None
+    nbytes = int(base.size) * np.dtype(base.dtype).itemsize
+    if nbytes <= 0:
+        return None
+    n_chunks = -(-nbytes // chunk_bytes)
+    idx: List[int] = []
+    blobs: List[bytes] = []
+    for off, data in sorted(segs):
+        if off % chunk_bytes:
+            return None                  # not chunk-aligned: DUS path
+        i = off // chunk_bytes
+        want = min((i + 1) * chunk_bytes, nbytes) - off
+        if i >= n_chunks or len(data) != want:
+            return None                  # partial chunk: DUS path
+        idx.append(i)
+        blobs.append(data)
+    o = _active_obs()
+    span = o.span("scatter_dev", chunks=len(idx)) if o is not None \
+        else contextlib.nullcontext()
+    with span:
+        try:
+            from repro.kernels.patch_scatter.ops import scatter_chunks_auto
+            out, moved = scatter_chunks_auto(base, idx, blobs, chunk_bytes)
+        except Exception as e:  # noqa: BLE001 — no backend: DUS path
+            note_kernel_fallback("patch_device_chunks", e)
+            return None
+    if o is not None:
+        try:
+            o.registry.counter("kishu_h2d_bytes_total").inc(moved)
+        except Exception:  # noqa: BLE001 — metrics are best-effort
+            pass
+    return out, moved
+
+
 def patch_device_array(base: Any, segs: Sequence[Tuple[int, bytes]]) -> Any:
     """Patch a device array by updating only the dirty element ranges on
     device: the only host→device traffic is the dirty bytes themselves.

@@ -298,6 +298,9 @@ class KishuSession:
                    "bytes_logical": wstats.bytes_logical,
                    "chunks_written": wstats.chunks_written,
                    "chunks_reused": wstats.chunks_reused,
+                   "chunks_encoded": wstats.chunks_encoded,
+                   "chunks_codec_skipped": wstats.chunks_codec_skipped,
+                   "bytes_dev2host": wstats.bytes_dev2host,
                    "exec_s": stats.exec_s})
         stats.commit_id = node.commit_id
         stats.covs_updated = len(delta.updated)

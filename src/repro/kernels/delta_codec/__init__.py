@@ -1,0 +1,8 @@
+"""On-device bitshuffle+RLE block codec for the delta_pack pipeline.
+
+- ``host``   — pure-numpy encoder/decoder + frame assembly (no jax import);
+               the format oracle, registered as chunkstore codec id 4.
+- ``ref``    — jit-compiled jnp encoder, bit-identical plane stream.
+- ``kernel`` — Pallas TPU encoder (interpret=True on CPU CI).
+- ``ops``    — numpy-in/segment-out wrappers with auto backend probing.
+"""

@@ -1,0 +1,123 @@
+"""Pallas TPU kernel: on-device bit-plane encode of the compacted buffer.
+
+Runs immediately after ``delta_pack`` on the same device, turning the
+compacted dirty-chunk buffer into the codec's plane stream *before* it
+crosses PCIe — the host then assembles KZC1 frames (``host.py``) without
+ever seeing the raw bytes.
+
+Grid: one program per group (``gw`` words), sequential per core, so the
+SMEM running counter is a legal cross-step accumulator — the same
+compaction pattern as ``delta_pack``.  Each step streams one (1, gw) block
+in, classifies its 32 bit-planes (all-zero / all-one / stored) with
+unrolled OR/AND halving trees (no axis reductions — Mosaic-friendly), packs
+stored planes into gw-bit bitmaps via a shift + OR-tree, and appends them
+at the running position.
+
+Outputs (group-major, plane-ascending — byte-identical stream to
+``host.plane_split`` + compaction):
+  masks   uint32 [n_groups, 2]        — (stored_mask, ones_mask)
+  count   int32  [1, 1]               — total stored planes
+  planes  uint32 [n_groups*32, gw/32] — stored planes compacted to the
+                                        front; rows past ``count`` garbage
+
+VMEM: one (1, gw) input block plus the whole planes buffer
+(n_groups * 32 * gw/8 bytes = input_bytes) — callers reuse delta_pack's
+segment bound, so a call never exceeds the segment budget.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _or_tree_rows(v: jax.Array) -> jax.Array:
+    """OR-reduce v [rows, 1] -> scalar via an unrolled halving tree."""
+    rows = v.shape[0]
+    while rows > 1:
+        half = rows // 2
+        v = v[:half, :] | v[half:rows, :]
+        rows = half
+    return v[0, 0]
+
+
+def _codec_encode_kernel(words_ref, masks_ref, count_ref, planes_ref,
+                         cnt_ref):
+    g = pl.program_id(0)
+
+    @pl.when(g == 0)
+    def _():
+        cnt_ref[0] = 0                 # running stored-plane counter
+
+    w = words_ref[...]                                   # (1, gw) uint32
+    gw = w.shape[1]
+    pw = gw // 32
+    grouped = w.reshape(pw, 32)        # element [j, k] = word j*32 + k
+    shifts = jax.lax.broadcasted_iota(jnp.uint32, (pw, 32), 1)
+    base = cnt_ref[0]
+    off = jnp.int32(0)
+    smask = jnp.uint32(0)
+    omask = jnp.uint32(0)
+    for p in range(32):                # unrolled: 32 static plane slots
+        bits = (grouped >> jnp.uint32(p)) & jnp.uint32(1)
+        v = bits << shifts             # (pw, 32): lane k carries bit k
+        length = 32
+        while length > 1:              # OR-tree pack -> bitmap word per row
+            half = length // 2
+            v = v[:, :half] | v[:, half:length]
+            length = half
+        packed = v                     # (pw, 1): plane p's gw-bit bitmap
+        zero = _or_tree_rows(packed) == jnp.uint32(0)
+        ones = _or_tree_rows(~packed) == jnp.uint32(0)
+        store = jnp.logical_not(zero) & jnp.logical_not(ones)
+        smask = smask | (store.astype(jnp.uint32) << jnp.uint32(p))
+        omask = omask | (ones.astype(jnp.uint32) << jnp.uint32(p))
+
+        @pl.when(store)
+        def _(packed=packed, off=off):
+            planes_ref[pl.ds(base + off, 1), :] = packed.reshape(1, pw)
+
+        off = off + store.astype(jnp.int32)
+
+    masks_ref[0, 0] = smask
+    masks_ref[0, 1] = omask
+    cnt_ref[0] = base + off
+    count_ref[0, 0] = base + off       # last program leaves the total
+
+
+@functools.partial(jax.jit, static_argnames=("gw", "interpret"))
+def codec_encode_pallas(rows: jax.Array, *, gw: int,
+                        interpret: bool = False):
+    """rows: uint32 [R, W] with W % gw == 0, gw a power of two >= 32.
+
+    Returns (masks [R*W//gw, 2] u32, count [1,1] i32,
+    planes [R*W//gw*32, gw//32] u32) — same contract as
+    :func:`ref.codec_encode_ref`."""
+    r, w = rows.shape
+    assert gw >= 32 and gw & (gw - 1) == 0, f"gw={gw}"
+    assert w % gw == 0, (w, gw)
+    gpr = w // gw
+    ng = r * gpr
+    pw = gw // 32
+    return pl.pallas_call(
+        _codec_encode_kernel,
+        grid=(ng,),
+        in_specs=[
+            pl.BlockSpec((1, gw), lambda g: (g // gpr, g % gpr)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 2), lambda g: (g, 0)),
+            pl.BlockSpec((1, 1), lambda g: (0, 0)),
+            pl.BlockSpec((ng * 32, pw), lambda g: (0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((ng, 2), jnp.uint32),
+            jax.ShapeDtypeStruct((1, 1), jnp.int32),
+            jax.ShapeDtypeStruct((ng * 32, pw), jnp.uint32),
+        ],
+        scratch_shapes=[pltpu.SMEM((1,), jnp.int32)],
+        interpret=interpret,
+    )(rows)

@@ -1,0 +1,49 @@
+"""jnp reference encoder for the bit-plane codec.
+
+Same contract as :func:`kernel.codec_encode_pallas` and the same plane
+stream as ``host.bitplane_compress`` — the compaction order (stable sort on
+the negated store flags) matches the kernel's running-counter append order,
+so device payloads are byte-identical to host payloads.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+
+@functools.partial(jax.jit, static_argnames=("gw",))
+def codec_encode_ref(rows: jax.Array, *, gw: int):
+    """Encode uint32 ``rows`` [R, W] (W % gw == 0) into bit-planes.
+
+    Returns:
+      masks  uint32 [R * W//gw, 2]  — (stored_mask, ones_mask) per group
+      count  int32  [1, 1]          — number of stored planes
+      planes uint32 [R * W//gw * 32, gw//32] — stored planes compacted to
+                                      the front in (group, plane) order
+    """
+    r, w = rows.shape
+    gpr = w // gw
+    ng = r * gpr
+    pw = gw // 32
+    grouped = rows.reshape(ng, pw, 32)
+    shifts = jnp.arange(32, dtype=jnp.uint32)
+    per_plane = []
+    for p in range(32):
+        bits = (grouped >> jnp.uint32(p)) & jnp.uint32(1)
+        per_plane.append(jnp.sum(bits << shifts, axis=2, dtype=jnp.uint32))
+    planes = jnp.stack(per_plane, axis=1)                    # [ng, 32, pw]
+    zero = jnp.all(planes == 0, axis=2)
+    ones = jnp.all(planes == jnp.uint32(0xFFFFFFFF), axis=2)
+    store = (~zero) & (~ones)                                # [ng, 32]
+    smask = jnp.sum(jnp.where(store, jnp.uint32(1) << shifts, 0),
+                    axis=1, dtype=jnp.uint32)
+    omask = jnp.sum(jnp.where(ones, jnp.uint32(1) << shifts, 0),
+                    axis=1, dtype=jnp.uint32)
+    masks = jnp.stack([smask, omask], axis=1)
+    flags = store.reshape(ng * 32)
+    order = jnp.argsort(~flags, stable=True)                 # stored first
+    buf = planes.reshape(ng * 32, pw)[order]
+    count = jnp.sum(flags.astype(jnp.int32)).reshape(1, 1)
+    return masks, count, buf

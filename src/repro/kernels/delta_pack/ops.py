@@ -31,6 +31,19 @@ from repro.core import hashing
 DEFAULT_SEG_BYTES = 4 << 20      # compacted VMEM buffer bound per launch
 
 
+def _obs_span(name: str, **args):
+    """Span on the active SessionObs, or a no-op outside a session."""
+    import contextlib
+    try:
+        from repro import obs as _obs
+        o = _obs.active()
+        if o is not None:
+            return o.span(name, **args)
+    except Exception:  # noqa: BLE001 — observability is best-effort
+        pass
+    return contextlib.nullcontext()
+
+
 @dataclass
 class _Seg:
     start: int                   # first chunk index covered by this segment
@@ -49,6 +62,8 @@ class DeltaPack:
     hashes: np.ndarray           # uint64 [n_chunks] detection hashes
     dirty: np.ndarray            # ascending global dirty-chunk indices
     bytes_transferred: int = 0   # device→host bytes moved so far
+    codec_chunks_encoded: int = 0    # chunks that crossed PCIe as frames
+    codec_chunks_skipped: int = 0    # probe veto / frame larger than raw
     _segments: List[_Seg] = field(default_factory=list)
 
     @property
@@ -63,20 +78,13 @@ class DeltaPack:
         return min((i + 1) * self.chunk_bytes, self.nbytes) \
             - i * self.chunk_bytes
 
-    def read_chunks(self, indices: Optional[Iterable[int]] = None
-                    ) -> Iterator[Tuple[int, bytes]]:
-        """Yield ``(chunk_index, chunk_bytes)`` for the requested dirty
-        chunks in ascending index order, moving only compacted rows.
-
-        Double-buffered: before segment *i*'s rows are materialized (a
-        blocking ``np.asarray``), segment *i+1*'s ``copy_to_host_async`` is
-        already in flight — so while the caller hashes/uploads segment *i*'s
-        chunks, the next segment's DMA proceeds in parallel.
-        """
+    def _plan(self, indices: Optional[Iterable[int]]
+              ) -> List[Tuple[_Seg, List[int]]]:
+        """Per-segment read plan for the requested dirty chunks."""
         want = sorted(set(int(i) for i in indices)) if indices is not None \
             else [int(i) for i in self.dirty]
         if not want:
-            return
+            return []
         bad = [i for i in want if not (0 <= i < self.n_chunks)]
         assert not bad, f"chunk indices out of range: {bad[:4]}"
         plan: List[Tuple[_Seg, List[int]]] = []
@@ -90,6 +98,19 @@ class DeltaPack:
                 raise KeyError(f"chunks {missing[:4]} are not dirty in "
                                f"this pack")
             plan.append((seg, sel))
+        return plan
+
+    def read_chunks(self, indices: Optional[Iterable[int]] = None
+                    ) -> Iterator[Tuple[int, bytes]]:
+        """Yield ``(chunk_index, chunk_bytes)`` for the requested dirty
+        chunks in ascending index order, moving only compacted rows.
+
+        Double-buffered: before segment *i*'s rows are materialized (a
+        blocking ``np.asarray``), segment *i+1*'s ``copy_to_host_async`` is
+        already in flight — so while the caller hashes/uploads segment *i*'s
+        chunks, the next segment's DMA proceeds in parallel.
+        """
+        plan = self._plan(indices)
         if plan:
             try:                    # prime the pipeline
                 plan[0][0].buf.copy_to_host_async()
@@ -108,6 +129,90 @@ class DeltaPack:
             for ci in sel:
                 row = raw[rowmap[ci]]
                 yield ci, row[: self._chunk_len(ci)].tobytes()
+
+    def read_chunks_encoded(self, indices: Optional[Iterable[int]] = None
+                            ) -> Iterator[Tuple[int, bytes,
+                                                Optional[bytes]]]:
+        """Like :meth:`read_chunks`, but compress each segment *on device*
+        with the bit-plane codec (kernels/delta_codec) before it crosses
+        PCIe: yields ``(chunk_index, logical_bytes, stored_frame)`` where
+        ``stored_frame`` is a ready-to-store KZC1 frame (None when the
+        chunk went raw — codec off, probe veto, or the frame would not
+        save bytes).  Chunk keys stay logical-byte: the logical bytes are
+        reconstructed host-side from the frame itself.
+
+        Device→host traffic per segment is 8 bytes/group of masks plus only
+        the *stored* planes — the compacted rows themselves never cross.
+        A tiny word sample (a few hundred bytes) is pulled first to skip
+        the encode entirely for incompressible data.
+        """
+        from repro.kernels.delta_codec import host as codec_host
+        from repro.kernels.delta_codec import ops as codec_ops
+
+        plan = self._plan(indices)
+        if not plan:
+            return
+        width = self.chunk_bytes // 4
+        engage = (codec_ops.device_codec_enabled()
+                  and width >= codec_host.MIN_GROUP_WORDS)
+        if engage:                      # sampled-incompressibility probe
+            try:
+                engage = codec_ops.probe_device_rows(plan[0][0].buf)
+            except Exception:  # noqa: BLE001 — probe trouble: go raw
+                engage = False
+        if not engage:
+            self.codec_chunks_skipped += sum(len(sel) for _, sel in plan)
+            for ci, data in self.read_chunks(indices):
+                yield ci, data, None
+            return
+
+        # phase 1: launch every segment's encode, overlap plane DMA
+        enc: List[Optional[tuple]] = []
+        for seg, _sel in plan:
+            try:
+                with _obs_span("encode_dev", rows=int(seg.dirty.size)):
+                    masks, planes_dev, gw = codec_ops.encode_rows_auto(
+                        seg.buf)
+                try:
+                    planes_dev.copy_to_host_async()
+                except AttributeError:
+                    pass
+                enc.append((masks, planes_dev, gw))
+            except Exception as e:  # noqa: BLE001 — encode degrades to raw
+                from repro.core.delta import note_kernel_fallback
+                note_kernel_fallback("codec_encode", e)
+                enc.append(None)
+
+        # phase 2: materialize plane streams, assemble per-chunk frames
+        for k, (seg, sel) in enumerate(plan):
+            if enc[k] is None:          # this segment degraded to raw
+                host = np.asarray(seg.buf)
+                self.bytes_transferred += host.nbytes
+                self.codec_chunks_skipped += len(sel)
+                rowmap = {int(ci): r for r, ci in enumerate(seg.dirty)}
+                raw = host.view(np.uint8)
+                for ci in sel:
+                    row = raw[rowmap[ci]]
+                    yield ci, row[: self._chunk_len(ci)].tobytes(), None
+                continue
+            masks, planes_dev, gw = enc[k]
+            planes = np.asarray(planes_dev)     # blocks on this DMA only
+            self.bytes_transferred += masks.nbytes + planes.nbytes
+            gpr = width // gw
+            frames = codec_host.frames_from_encoded(
+                masks, planes, gpr, gw,
+                [self._chunk_len(int(ci)) for ci in seg.dirty])
+            rowmap = {int(ci): r for r, ci in enumerate(seg.dirty)}
+            for ci in sel:
+                frame = frames[rowmap[ci]]
+                logical = codec_host.bitplane_decompress(
+                    frame[codec_host._FRAME_HDR:])
+                if len(frame) < len(logical):
+                    self.codec_chunks_encoded += 1
+                    yield ci, logical, frame
+                else:                   # frame saves nothing: store raw
+                    self.codec_chunks_skipped += 1
+                    yield ci, logical, None
 
 
 def delta_pack(x, prev_hashes, chunk_bytes: int = 1 << 18, *,

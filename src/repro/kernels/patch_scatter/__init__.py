@@ -1,0 +1,7 @@
+"""Fused device-scatter checkout: patch every dirty chunk of a co-variable
+into the live device array in one Pallas pass.
+
+- ``kernel`` — scalar-prefetch scatter with input/output aliasing.
+- ``ref``    — jit-compiled ``words.at[idx].set(rows)`` reference.
+- ``ops``    — bytes-in wrappers (word bitcasts, padding, auto probe).
+"""

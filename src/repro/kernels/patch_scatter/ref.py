@@ -1,0 +1,16 @@
+"""jnp reference for the fused chunk scatter: one XLA scatter call, same
+contract as :func:`kernel.patch_scatter_pallas`.  Duplicate indices (row
+padding repeats row 0 / idx 0) write identical data, so the order XLA picks
+is immaterial."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+@jax.jit
+def patch_scatter_ref(words: jax.Array, idx: jax.Array,
+                      rows: jax.Array) -> jax.Array:
+    """words u32 [C, W]; idx i32 [K]; rows u32 [K, W] ->
+    words with words[idx[k]] = rows[k]."""
+    return words.at[idx, :].set(rows)

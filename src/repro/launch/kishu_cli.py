@@ -185,6 +185,16 @@ def cmd_stats(store, graph: CheckpointGraph, args) -> int:
     print(f"ckpt logical {logical:,d}")
     if logical:
         print(f"delta ratio  {moved / logical:.1%}")
+    # device-codec accounting: PCIe traffic on the write path (device→host
+    # after on-device compression) and how often the codec engaged
+    d2h = sum(n.stats.get("bytes_dev2host", 0) for n in graph.nodes.values())
+    enc = sum(n.stats.get("chunks_encoded", 0) for n in graph.nodes.values())
+    skip = sum(n.stats.get("chunks_codec_skipped", 0)
+               for n in graph.nodes.values())
+    if d2h or enc or skip:
+        print(f"dev->host    {d2h:,d}")
+        print(f"dev encoded  {enc}")
+        print(f"codec skips  {skip}")
     return 0
 
 

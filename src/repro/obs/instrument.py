@@ -103,6 +103,26 @@ class InstrumentedStore(ChunkStore):
         self._put_bytes.inc(nbytes)
         return written
 
+    def put_chunk_stored(self, key: str, data: bytes) -> bool:
+        t0 = time.perf_counter()
+        try:
+            wrote = self.inner.put_chunk_stored(key, data)
+        finally:
+            self._obs("put_chunk", t0)
+        if wrote:
+            self._put_bytes.inc(len(data))
+        return wrote
+
+    def put_chunks_stored(self, pairs: Iterable[Tuple[str, bytes]]) -> int:
+        pairs, nbytes = _pairs_bytes(pairs)
+        t0 = time.perf_counter()
+        try:
+            written = self.inner.put_chunks_stored(pairs)
+        finally:
+            self._obs("put_chunks", t0)
+        self._put_bytes.inc(nbytes)
+        return written
+
     def get_chunk(self, key: str) -> bytes:
         t0 = time.perf_counter()
         try:

@@ -1,0 +1,322 @@
+"""On-device bit-plane codec: host codec contract, device↔host parity,
+frame/store interop, probe heuristics, and writer plumbing (fast lane).
+
+The load-bearing guarantee: a chunk encoded ON DEVICE (bitshuffle + RLE
+masks, Pallas kernel exercised via the interpreter) decodes to the exact
+logical bytes through the plain numpy host decoder, on every dtype, odd
+shape and tail length — and a store holding a mix of raw, zlib-framed and
+bshuf-framed chunks under the same logical CAS keys reads back
+transparently on every backend.
+"""
+import numpy as np
+import pytest
+
+from repro.core.chunkstore import (CompressedStore, DirectoryStore,
+                                   MemoryStore, SQLiteStore, chunk_key,
+                                   decode_chunk, encode_chunk,
+                                   resolve_codec)
+from repro.kernels.delta_codec import host as H
+from repro.kernels.delta_codec import ops as codec_ops
+from _hypothesis_compat import (HAVE_HYPOTHESIS, HealthCheck, given,
+                                settings, st)
+
+BACKENDS = [("ref", {}), ("pallas", {"interpret": True})]
+
+
+# ---------------------------------------------------------------- host codec
+
+@pytest.mark.parametrize("n", [0, 1, 3, 4, 127, 128, 1024, 4096, 4097])
+def test_host_roundtrip_sizes(n):
+    rng = np.random.default_rng(n)
+    for data in (bytes(rng.integers(0, 256, n, dtype=np.uint8)),
+                 (np.arange(-(-n // 4) or 1, dtype=np.uint32) % 97)
+                 .tobytes()[:n]):
+        payload = H.bitplane_compress(data)
+        assert H.bitplane_decompress(payload) == data
+
+
+def test_host_compresses_small_values():
+    """Values < 2**7 leave 25 of 32 bit-planes constant: the stream must
+    come out well under half the raw size."""
+    data = (np.arange(4096, dtype=np.uint32) % 97).tobytes()
+    payload = H.bitplane_compress(data)
+    assert len(payload) < len(data) // 2
+    assert H.bitplane_decompress(payload) == data
+
+
+def test_decompress_rejects_corrupt():
+    data = (np.arange(256, dtype=np.uint32) % 17).tobytes()
+    payload = bytearray(H.bitplane_compress(data))
+    with pytest.raises(ValueError):
+        H.bitplane_decompress(bytes(payload[:-1]))     # truncated
+    payload[0] = 9                                     # bad version
+    with pytest.raises(ValueError):
+        H.bitplane_decompress(bytes(payload))
+    with pytest.raises(ValueError):
+        H.bitplane_decompress(b"")
+
+
+@settings(max_examples=60, deadline=None,
+          suppress_health_check=list(HealthCheck) if HAVE_HYPOTHESIS else [])
+@given(st.binary(min_size=0, max_size=2048))
+def test_host_roundtrip_property(data):
+    assert H.bitplane_decompress(H.bitplane_compress(data)) == data
+
+
+# ----------------------------------------------- device encode ↔ host decode
+
+_DTYPES = ["uint8", "int8", "bool", "uint16", "int16", "float16",
+           "uint32", "int32", "float32", "uint64", "int64", "float64",
+           "complex64", "complex128"]
+_SHAPES = [(0,), (1,), (7,), (33,), (5, 13), (256,), (3, 4, 5)]
+
+
+def _chunk_rows(data: bytes, chunk_bytes: int):
+    """Split logical bytes into word-padded [R, W] uint32 rows + lengths,
+    the shape the delta pipeline hands the device encoder."""
+    lens, blobs = [], []
+    for lo in range(0, len(data), chunk_bytes):
+        blob = data[lo:lo + chunk_bytes]
+        lens.append(len(blob))
+        blobs.append(blob + b"\0" * (chunk_bytes - len(blob)))
+    rows = (np.frombuffer(b"".join(blobs), np.uint8)
+            .reshape(len(blobs), chunk_bytes).view("<u4"))
+    return rows, lens
+
+
+@pytest.mark.parametrize("backend,kw", BACKENDS)
+@pytest.mark.parametrize("dtype", _DTYPES)
+@pytest.mark.parametrize("shape", _SHAPES)
+def test_device_encode_host_decode_every_dtype(backend, kw, dtype, shape):
+    """Property: device encode (incl. the Pallas kernel in interpret mode)
+    ↔ host numpy decode is byte-exact for every dtype / odd shape / empty
+    chunk, including word-padded tails truncated by raw_len."""
+    import jax.numpy as jnp
+
+    rng = np.random.default_rng(hash((dtype, shape)) % 2**32)
+    n = int(np.prod(shape))
+    raw = rng.integers(0, 256, max(n, 1) * np.dtype(dtype).itemsize,
+                       dtype=np.uint8)
+    data = np.frombuffer(raw.tobytes(), dtype=dtype, count=n) \
+        .reshape(shape).tobytes()
+    cb = 128                              # MIN_GROUP_WORDS words
+    if not data:                          # empty chunk: host framing only
+        assert H.bitplane_decompress(H.bitplane_compress(data)) == data
+        return
+    rows, lens = _chunk_rows(data, cb)
+    masks, planes_d, gw = codec_ops.encode_rows(
+        jnp.asarray(rows), backend=backend, **kw)
+    frames = H.frames_from_encoded(masks, np.asarray(planes_d),
+                                   rows.shape[1] // gw, gw, lens)
+    got = b"".join(H.bitplane_decompress(f[H._FRAME_HDR:]) for f in frames)
+    assert got == data
+
+
+@pytest.mark.parametrize("backend,kw", BACKENDS)
+def test_device_matches_host_stream(backend, kw):
+    """The device payload must be byte-identical to the host reference
+    codec at the same group size — the CAS frame is the contract."""
+    import jax.numpy as jnp
+
+    rows = (np.arange(8 * 256, dtype=np.uint32) % 251).reshape(8, 256)
+    masks, planes_d, gw = codec_ops.encode_rows(
+        jnp.asarray(rows), backend=backend, **kw)
+    frames = H.frames_from_encoded(masks, np.asarray(planes_d),
+                                   256 // gw, gw, [1024] * 8)
+    for i in range(8):
+        want = H.bitplane_compress(rows[i].tobytes(), group_words=gw)
+        assert frames[i][H._FRAME_HDR:] == want
+
+
+def test_encode_rows_rejects_narrow_rows():
+    import jax.numpy as jnp
+    with pytest.raises(ValueError):
+        codec_ops.encode_rows(jnp.zeros((4, 16), jnp.uint32), backend="ref")
+
+
+# ------------------------------------------------------------------- probes
+
+def test_probe_heuristics():
+    compressible = (np.arange(4096, dtype=np.uint32) % 97).tobytes()
+    random = bytes(np.random.default_rng(0)
+                   .integers(0, 256, 4096, dtype=np.uint8))
+    assert H.bitplane_probe(compressible)
+    assert not H.bitplane_probe(random)
+    assert not H.bitplane_probe(b"x" * (H.PROBE_MIN_BYTES - 1))
+
+
+def test_probe_device_rows():
+    import jax.numpy as jnp
+    good = jnp.asarray((np.arange(4 * 256, dtype=np.uint32) % 97)
+                       .reshape(4, 256))
+    bad = jnp.asarray(np.random.default_rng(1)
+                      .integers(0, 2**32, (4, 256), dtype=np.uint64)
+                      .astype(np.uint32))
+    assert codec_ops.probe_device_rows(good)
+    assert not codec_ops.probe_device_rows(bad)
+    assert not codec_ops.probe_device_rows(jnp.zeros((0, 256), jnp.uint32))
+
+
+# ----------------------------------------------------------- store interop
+
+def _stores(tmp_path):
+    from repro.core.fabric import ReplicatedStore, ShardedStore, TieredStore
+    yield "memory", MemoryStore()
+    yield "dir", DirectoryStore(str(tmp_path / "dir"))
+    yield "sqlite", SQLiteStore(str(tmp_path / "cas.db"))
+    yield "fabric", ShardedStore([MemoryStore() for _ in range(3)])
+    yield "tiered", TieredStore(SQLiteStore(str(tmp_path / "cold.db")))
+    yield "replica", ReplicatedStore([MemoryStore(), MemoryStore()])
+
+
+def test_mixed_raw_and_framed_reads(tmp_path):
+    """One store holding raw, zlib-framed and device-bshuf-framed chunks
+    under logical CAS keys must read all of them back as logical bytes on
+    every backend — CLI / loader / fabric paths never special-case."""
+    logical = {
+        "comp": (np.arange(1024, dtype=np.uint32) % 89).tobytes(),
+        "rand": bytes(np.random.default_rng(2)
+                      .integers(0, 256, 4096, dtype=np.uint8)),
+        "tiny": b"hello chunks",
+    }
+    zlib_codec = resolve_codec("zlib")
+    for name, store in _stores(tmp_path):
+        keys = {}
+        for tag, data in logical.items():
+            k = chunk_key(data)
+            keys[tag] = k
+            if tag == "comp":     # device-encoded bshuf frame, stored put
+                frame = H.make_frame(H.bitplane_compress(data), len(data))
+                assert frame[:4] == H.FRAME_MAGIC
+                store.put_chunk_stored(k, frame)
+            elif tag == "rand":   # host zlib framing (may stay raw)
+                store.put_chunk_stored(k, encode_chunk(data, zlib_codec))
+            else:                 # plain raw put
+                store.put_chunk(k, data)
+        for tag, data in logical.items():
+            assert store.get_chunk(keys[tag]) == data, (name, tag)
+        got = store.get_chunks(list(keys.values()))
+        assert got == {keys[t]: d for t, d in logical.items()}, name
+
+
+def test_stored_put_does_not_double_frame():
+    inner = MemoryStore()
+    store = CompressedStore(inner, codec="zlib")
+    data = (np.arange(2048, dtype=np.uint32) % 97).tobytes()
+    frame = H.make_frame(H.bitplane_compress(data), len(data))
+    k = chunk_key(data)
+    store.put_chunks_stored([(k, frame)])
+    assert inner.chunks[k] == frame           # bit-exact, no re-framing
+    assert store.get_chunk(k) == data
+    assert store.stored_put_bytes == len(frame)
+
+
+def test_compressed_store_probe_veto_counts():
+    store = CompressedStore(MemoryStore(), codec="bshuf")
+    rnd = bytes(np.random.default_rng(3)
+                .integers(0, 256, 4096, dtype=np.uint8))
+    store.put_chunk(chunk_key(rnd), rnd)
+    assert store.chunks_codec_skipped == 1
+    comp = (np.arange(1024, dtype=np.uint32) % 89).tobytes()
+    store.put_chunk(chunk_key(comp), comp)
+    assert store.chunks_codec_skipped == 1
+    assert store.get_chunk(chunk_key(comp)) == comp
+    assert store.stored_put_bytes < store.logical_put_bytes
+
+
+def test_bshuf_codec_registered():
+    codec = resolve_codec("bshuf")
+    assert codec is not None and codec.codec_id == H.CODEC_ID
+    data = (np.arange(512, dtype=np.uint32) % 53).tobytes()
+    enc = encode_chunk(data, codec)
+    assert enc[:4] == H.FRAME_MAGIC and len(enc) < len(data)
+    assert decode_chunk(enc) == data
+
+
+# ------------------------------------------------------- pipeline plumbing
+
+def _mk_pack(nbytes, cb, dirty, *, compressible=True, seed=0):
+    import jax.numpy as jnp
+
+    from repro.core import hashing
+    from repro.kernels.delta_pack.ops import delta_pack
+
+    rng = np.random.default_rng(seed)
+    if compressible:
+        a = ((np.arange(-(-nbytes // 4), dtype=np.uint32) % 97)
+             .tobytes()[:nbytes])
+        a = np.frombuffer(a, np.uint8).copy()
+    else:
+        a = rng.integers(0, 256, nbytes, dtype=np.uint8)
+    prev = hashing.chunk_hashes_np(a.tobytes(), cb)
+    b = a.copy()
+    for i in dirty:
+        b[i * cb] ^= 0x01
+    return delta_pack(jnp.asarray(b), prev, cb, backend="ref"), b
+
+
+def test_read_chunks_encoded_frames_and_counters():
+    pack, b = _mk_pack(4096 * 16, 4096, [1, 5, 9], compressible=True)
+    out = list(pack.read_chunks_encoded())
+    assert [ci for ci, _, _ in out] == [1, 5, 9]
+    assert pack.codec_chunks_encoded == 3 and pack.codec_chunks_skipped == 0
+    for ci, logical, frame in out:
+        lo = ci * 4096
+        assert logical == b[lo:lo + 4096].tobytes()
+        assert frame is not None and frame[:4] == H.FRAME_MAGIC
+        assert decode_chunk(frame) == logical
+        assert len(frame) < len(logical)
+
+
+def test_read_chunks_encoded_probe_veto_and_env_gate(monkeypatch):
+    pack, _ = _mk_pack(4096 * 8, 4096, [2, 6], compressible=False, seed=5)
+    out = list(pack.read_chunks_encoded())
+    assert all(frame is None for _, _, frame in out)
+    assert pack.codec_chunks_skipped == 2 and pack.codec_chunks_encoded == 0
+
+    monkeypatch.setenv("KISHU_DEVICE_CODEC", "0")
+    pack2, _ = _mk_pack(4096 * 8, 4096, [2, 6], compressible=True)
+    out2 = list(pack2.read_chunks_encoded())
+    assert all(frame is None for _, _, frame in out2)
+    assert pack2.codec_chunks_skipped == 2
+
+
+def test_session_write_stats_surface_codec(tmp_path, monkeypatch):
+    """chunks_encoded / chunks_codec_skipped / bytes_dev2host must surface
+    in WriteStats and in the persisted commit stats the CLI aggregates."""
+    import jax.numpy as jnp
+
+    from repro.core import KishuSession
+
+    monkeypatch.setenv("KISHU_DEVICE_DELTA", "1")
+    monkeypatch.setenv("KISHU_DEVICE_HASH", "1")
+    monkeypatch.setenv("KISHU_DEVICE_CODEC", "1")
+    store = MemoryStore()
+    sess = KishuSession(store, chunk_bytes=4096, cache_bytes=0)
+
+    def init(ns):
+        ns["v"] = jnp.arange(1 << 14, dtype=jnp.int32) % 97
+
+    def mutate(ns):
+        ns["v"] = ns["v"].at[jnp.arange(4) * 1024].set(7)
+
+    sess.register("init", init)
+    sess.register("mutate", mutate)
+    sess.init_state({})
+    sess.run("init")
+    cid = sess.run("mutate")
+    w = sess.last_run.write
+    assert w.chunks_encoded > 0
+    assert w.bytes_dev2host > 0
+    node = sess.graph.nodes[cid]
+    assert node.stats["chunks_encoded"] == w.chunks_encoded
+    assert node.stats["bytes_dev2host"] == w.bytes_dev2host
+    assert "chunks_codec_skipped" in node.stats
+
+    # the store holds *frames* for the encoded chunks, under logical keys
+    framed = [k for k in store.list_chunk_keys()
+              if store.chunks[k][:4] == H.FRAME_MAGIC]
+    assert framed
+    for k in framed:
+        assert chunk_key(store.get_chunk(k)) == k
+    sess.close()
