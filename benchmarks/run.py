@@ -93,6 +93,17 @@ def bench_fabric(quick: bool):
     return rows
 
 
+def bench_planner(quick: bool):
+    """Cost-based checkout planner: p50 checkout wall for fetch-only vs
+    planner-auto on a latency-injected device store at {1,10,50}% dirty,
+    plan-estimate-vs-actual error, bit-identity across modes.  Writes
+    BENCH_planner.json."""
+    from benchmarks import bench_planner as b
+    rows = b.run(repeats=2) if quick else b.run()
+    _write_bench_json("BENCH_planner.json", rows)
+    return rows
+
+
 def bench_txn(quick: bool):
     """Transactional commit engine: group-commit throughput, publish
     latency hidden behind think time, recovery vs journal length.  Writes
@@ -216,6 +227,7 @@ ALL = {
     "device_delta": bench_device_delta,
     "device_codec": bench_device_codec,
     "fabric": bench_fabric,
+    "planner": bench_planner,
     "txn": bench_txn,
     "multi": bench_multi,
     "obs": bench_obs,
@@ -247,6 +259,12 @@ def main() -> None:
                     help="fast CI gate: storage-fabric scatter-gather "
                          "speedup + replica-loss restore assertions + "
                          "BENCH_fabric.json")
+    ap.add_argument("--smoke-planner", action="store_true",
+                    help="fast CI gate: cost-based checkout planner — "
+                         "planner-auto >=1.5x over fetch-only at 10%% "
+                         "dirty on a latency-injected store, bit-identity "
+                         "+ plan-matches-execution assertions + "
+                         "BENCH_planner.json")
     ap.add_argument("--smoke-txn", action="store_true",
                     help="fast CI gate: transactional commit engine — "
                          "group-commit amortization + crash-recovery "
@@ -287,6 +305,13 @@ def main() -> None:
         _print_rows(rows)
         _write_bench_json("BENCH_fabric.json", rows)
         print("# fabric smoke OK", flush=True)
+        return
+    if args.smoke_planner:
+        from benchmarks import bench_planner as b
+        rows = b.smoke()        # raises AssertionError on regression
+        _print_rows(rows)
+        _write_bench_json("BENCH_planner.json", rows)
+        print("# planner smoke OK", flush=True)
         return
     if args.smoke_txn:
         from benchmarks import bench_txn as b

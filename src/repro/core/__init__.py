@@ -24,6 +24,9 @@ from repro.core.covariable import (CovKey, LeafRecord, RecordBuilder,
                                    StateDelta, cov_key, detect_delta,
                                    group_covariables)
 from repro.core.graph import CheckpointGraph, CheckoutPlan, CommitNode
+from repro.core.planner import (CheckoutPlanner, CovPlan, PricedPlan,
+                                StoreCostModel, format_plan,
+                                resolve_plan_mode)
 from repro.core.namespace import (Namespace, TrackedNamespace, flatten_tree,
                                   unflatten_tree)
 from repro.core.serialize import (ChunkMissingError, OpaqueLeaf,
@@ -45,4 +48,6 @@ __all__ = [
     "TieredStore", "parse_topology", "rebalance", "scrub",
     "FaultInjectingStore", "InjectedCrash", "FsckReport", "TxnEngine",
     "TxnError", "fsck", "recover",
+    "CheckoutPlanner", "CovPlan", "PricedPlan", "StoreCostModel",
+    "format_plan", "resolve_plan_mode",
 ]

@@ -15,6 +15,7 @@ round-trips.
 """
 from __future__ import annotations
 
+import threading
 import time
 from contextlib import nullcontext
 from dataclasses import dataclass, field
@@ -39,7 +40,13 @@ class CheckoutStats:
     covs_patched: int = 0           # subset of covs_loaded done via patching
     covs_deleted: int = 0
     covs_identical: int = 0
-    covs_recomputed: int = 0
+    covs_recomputed: int = 0        # co-variables restored via replay
+                                    # (counted once per cov by DataRestorer)
+    covs_planned_fetch: int = 0     # planner lane sizes (0 when plan_mode
+    covs_planned_replay: int = 0    #  is off — the fixed ladder ran)
+    covs_planned_patch: int = 0
+    plan_est_s: float = 0.0         # planner's cost estimate for the
+                                    # checkout (compare against wall_s)
     bytes_loaded: int = 0           # *moved*: bytes fetched from the backend
     bytes_cached: int = 0           # served from the shared chunk cache
     bytes_logical: int = 0          # logical size of restored co-variables
@@ -52,6 +59,20 @@ class CheckoutStats:
     kernel_fallbacks: int = 0       # device-kernel → host degradations
     wall_s: float = 0.0
     diff_s: float = 0.0
+
+
+# CheckoutStats fields a concurrent fetch lane accumulates into its own
+# instance and merges back after joining (plain += on a shared dataclass
+# would race with the replay lane)
+_ADDITIVE_STATS = (
+    "covs_loaded", "covs_patched", "covs_deleted", "covs_recomputed",
+    "bytes_loaded", "bytes_cached", "bytes_logical", "chunks_patched",
+    "chunks_inplace", "bytes_host2dev", "covs_scattered", "kernel_fallbacks")
+
+
+def _merge_stats(dst: CheckoutStats, src: CheckoutStats) -> None:
+    for name in _ADDITIVE_STATS:
+        setattr(dst, name, getattr(dst, name) + getattr(src, name))
 
 
 @dataclass
@@ -151,6 +172,9 @@ class StateLoader:
         self.probe_threshold_s = parallel.PARALLEL_LATENCY_THRESHOLD_S
         # observability handle (set by the session owning this loader)
         self.obs = None
+        # cost-based checkout planner (set by the session when plan_mode is
+        # not off); None keeps the fixed patch->fetch->fallback ladder
+        self.planner = None
 
     def _span(self, name: str, **args):
         return self.obs.span(name, **args) if self.obs is not None \
@@ -188,8 +212,9 @@ class StateLoader:
         if self.fallback is None:
             raise ChunkMissingError(
                 f"co-variable {key} @ {version} unavailable and no fallback")
-        if stats:
-            stats.covs_recomputed += 1
+        # covs_recomputed is owned by the DataRestorer (one count per
+        # replayed co-variable) — incrementing here too double-counted
+        # recursive fallbacks
         return self.fallback(key, version, stats)
 
     def load_covs(self, items: Sequence[Tuple[CovKey, str]],
@@ -350,8 +375,6 @@ class StateLoader:
                 raise ChunkMissingError(
                     f"co-variable {key} @ {version} unavailable and no "
                     f"fallback")
-            if stats:
-                stats.covs_recomputed += 1
             out[key] = self.fallback(key, version, stats)
         return out
 
@@ -531,6 +554,53 @@ class StateLoader:
             stats.bytes_logical += base_info["nbytes"]
         return values
 
+    def _materialize_mixed(self, full_items: List[Tuple[CovKey, str]],
+                           replay_items: List[Tuple[CovKey, str]],
+                           stats: Optional[CheckoutStats]
+                           ) -> Dict[CovKey, Dict[str, Any]]:
+        """Execute the planner's lanes: fetch slabs stream on a helper
+        thread while replays run on the calling thread (commands may touch
+        thread-affine state, and the restorer's own dependency loads nest
+        safely through the re-entrant parallel engine).  A replay the
+        planner mispredicted demotes to the fetch path after the lanes
+        join — planner-on never changes what a checkout can restore."""
+        if not replay_items:
+            return self.load_covs(full_items, stats)
+        box: Dict[str, Any] = {}
+        fstats = CheckoutStats()
+        th = None
+        if full_items:
+            def _fetch_lane():
+                try:
+                    box["out"] = self.load_covs(full_items, fstats)
+                except BaseException as e:  # noqa: BLE001 — raised on join
+                    box["err"] = e
+            th = threading.Thread(target=_fetch_lane,
+                                  name="kishu-fetch-lane", daemon=True)
+            th.start()
+        loaded: Dict[CovKey, Dict[str, Any]] = {}
+        demoted: List[Tuple[CovKey, str]] = []
+        for key, version in replay_items:
+            try:
+                if self.fallback is None:
+                    raise ChunkMissingError(
+                        f"co-variable {key} @ {version}: replay planned "
+                        f"but no fallback wired")
+                loaded[key] = self.fallback(key, version, stats)
+            except Exception as e:  # noqa: BLE001 — mispredicted replay
+                delta_mod.note_kernel_fallback("plan_replay", e)
+                demoted.append((key, version))
+        if th is not None:
+            th.join()
+        if stats is not None:
+            _merge_stats(stats, fstats)
+        if "err" in box:
+            raise box["err"]
+        loaded.update(box.get("out", {}))
+        if demoted:
+            loaded.update(self.load_covs(demoted, stats))
+        return loaded
+
     def checkout(self, tracked_ns, records: Dict[str, LeafRecord],
                  target: str) -> Tuple[Dict[str, LeafRecord], CheckoutStats]:
         """Execute an incremental checkout; mutates the namespace in place.
@@ -544,21 +614,35 @@ class StateLoader:
         # 1. plan: graph diff + chunk-level refinement — diverged covs whose
         #    live buffer matches the target structurally only fetch their
         #    differing chunks
+        replay_items: List[Tuple[CovKey, str]] = []
         with self._span("plan"):
             plan: CheckoutPlan = self.graph.diff(cur, target)
             stats.diff_s = time.perf_counter() - td
             stats.covs_identical = len(plan.identical)
             patches, full_items = self.plan_patches(plan, records,
                                                     tracked_ns.base)
+            if self.planner is not None and self.planner.engaged:
+                priced = self.planner.price(cur, target, plan, patches,
+                                            full_items)
+                patches, full_items, replay_items = self.planner.partition(
+                    priced, patches, full_items)
+                plan.patches = patches
+                stats.covs_planned_patch = len(patches)
+                stats.covs_planned_fetch = len(full_items)
+                stats.covs_planned_replay = len(replay_items)
+                stats.plan_est_s = priced.est_total_s
         with self._span("fetch"):
             patch_data, patches, demoted = self._fetch_patch_chunks(patches,
                                                                     stats)
         full_items = sorted(full_items + demoted)
 
         # 2. load fully-diverged co-variables (before mutating anything),
-        #    chunk I/O planned up front and prefetched in parallel
-        with self._span("materialize", covs=len(full_items)):
-            loaded = self.load_covs(full_items, stats)
+        #    chunk I/O planned up front and prefetched in parallel; with a
+        #    planner mixed plan the fetch slabs stream on a helper thread
+        #    while replays run here
+        with self._span("materialize",
+                        covs=len(full_items) + len(replay_items)):
+            loaded = self._materialize_mixed(full_items, replay_items, stats)
 
         # 3. apply patches (all data is in hand); unexpected failures fall
         #    back to the full serial load of just that co-variable

@@ -240,6 +240,15 @@ class ChunkCache:
             self.hits += 1
             return data
 
+    def contains(self, key: str) -> bool:
+        """Non-mutating membership probe: no LRU promotion, no hit/miss
+        accounting — the checkout planner prices cache-resident chunks at
+        zero without perturbing the cache's behavior."""
+        if self.max_bytes <= 0:
+            return False
+        with self._lock:
+            return key in self._d
+
     def get_many(self, keys: Iterable[str]) -> Dict[str, bytes]:
         out: Dict[str, bytes] = {}
         for k in keys:

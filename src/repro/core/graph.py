@@ -370,6 +370,10 @@ class CheckpointGraph:
                         "message": n.message,
                         "updated": len(n.manifests),
                         "deleted": len(n.deleted),
+                        # measured cell cost (None on pre-planner docs —
+                        # the planner substitutes a conservative default)
+                        "exec_s": n.stats.get("exec_s"),
+                        "replays": int(n.stats.get("replays", 0) or 0),
                         "head": cid == self.head})
         return out[-limit:] if limit else out
 

@@ -98,6 +98,11 @@ class TrackedNamespace(MutableMapping):
     def __init__(self, base: Namespace):
         self.base = base
         self.accessed: Set[str] = set()
+        self.read: Set[str] = set()     # data reads only — a pure overwrite
+                                        # (ns["x"] = v) touches ``accessed``
+                                        # but not ``read``, so replay deps
+                                        # can skip pre-images the command
+                                        # never looks at
         self.written: Set[str] = set()
         self.deleted: Set[str] = set()
         self._paused = False
@@ -109,6 +114,8 @@ class TrackedNamespace(MutableMapping):
 
     def __getitem__(self, name: str) -> Any:
         self._touch(name)
+        if not self._paused:
+            self.read.add(name)
         return self.base[name]
 
     def __setitem__(self, name: str, value: Any) -> None:
@@ -138,6 +145,8 @@ class TrackedNamespace(MutableMapping):
         touched = [k for k in self.base if k.startswith(pre) or k == prefix]
         for k in touched:
             self._touch(k)
+            if not self._paused:
+                self.read.add(k)
         return self.base.get_tree(prefix)
 
     def set_tree(self, prefix: str, tree: Any) -> None:
@@ -168,5 +177,6 @@ class TrackedNamespace(MutableMapping):
 
     def reset(self) -> None:
         self.accessed.clear()
+        self.read.clear()
         self.written.clear()
         self.deleted.clear()

@@ -88,7 +88,8 @@ class KishuSession:
                  lease_wait_s: float = 0.0,
                  lease_steal: bool = False,
                  chunk_cache: Optional[ChunkCache] = None,
-                 trace: Optional[bool] = None):
+                 trace: Optional[bool] = None,
+                 plan_mode: Optional[str] = None):
         # multi-session knobs (DESIGN.md §14):
         #   tenant       — scope this session to `tenant/<id>/` metadata on
         #                  the shared store (chunks stay shared/deduped)
@@ -101,6 +102,9 @@ class KishuSession:
         #   chunk_cache  — share one cache across sessions (kishud)
         #   trace        — pipeline span tracing (DESIGN.md §16); None
         #                  defers to $KISHU_TRACE, default off
+        #   plan_mode    — cost-based checkout planner (DESIGN.md §18):
+        #                  off/auto/fetch/replay; None defers to
+        #                  $KISHU_PLANNER, default off
         from repro.obs.instrument import InstrumentedStore
 
         if tenant is not None and not isinstance(store, NamespacedStore):
@@ -174,6 +178,7 @@ class KishuSession:
         with self.obs.activate():
             self.graph = CheckpointGraph(store, engine=self.engine)
         self.registry: Dict[str, Callable] = {}
+        self._replay_unsafe: set = set()   # register(replay_safe=False)
         self.records: Dict[str, Any] = {}
         self.covs: Dict[CovKey, List[str]] = {}
         self.check_all = check_all      # AblatedKishu(Check all) mode (§7.6)
@@ -185,6 +190,18 @@ class KishuSession:
         self.loader.obs = self.obs
         self.restorer = DataRestorer(self.graph, self.loader, self.registry)
         self.loader.fallback = self.restorer.recompute
+        # cost-based checkout planner (DESIGN.md §18): prices fetch vs
+        # replay vs patch per co-variable from the obs registry's store
+        # metrics + persisted exec_s; off keeps the fixed fallback ladder
+        from repro.core.planner import CheckoutPlanner, resolve_plan_mode
+        self.plan_mode = resolve_plan_mode(plan_mode)
+        self.planner = CheckoutPlanner(
+            self.graph, self.loader, commands=self.registry,
+            unsafe=self._replay_unsafe, mode=self.plan_mode,
+            cache=self.chunk_cache, obs=self.obs,
+            max_depth=self.restorer.max_depth)
+        if self.planner.engaged:
+            self.loader.planner = self.planner
         # live cache gauges: this session's view of its (possibly shared)
         # chunk cache — kishud disambiguates by tenant const-label
         reg = self.obs.registry
@@ -199,8 +216,17 @@ class KishuSession:
     # ------------------------------------------------------------------
     # attachment & commands
     # ------------------------------------------------------------------
-    def register(self, name: str, fn: Callable) -> None:
+    def register(self, name: str, fn: Callable, *,
+                 replay_safe: bool = True) -> None:
+        """Register a cell command.  ``replay_safe=False`` marks commands
+        the planner must never choose to re-run (external side effects,
+        non-deterministic inputs outside the namespace); the flag is
+        persisted per commit so it survives into other sessions' plans."""
         self.registry[name] = fn
+        if replay_safe:
+            self._replay_unsafe.discard(name)
+        else:
+            self._replay_unsafe.add(name)
 
     def init_state(self, tree: Dict[str, Any], message: str = "attach") -> str:
         """Attach: populate the namespace and commit the initial state."""
@@ -260,12 +286,19 @@ class KishuSession:
             self.covs = group_covariables(self.records)
         stats.detect_s = time.perf_counter() - t0
 
-        # dependencies: accessed co-variables at their pre-execution versions
+        # dependencies: co-variables the cell *read* (or deleted — replay
+        # must be able to `del` them), at their pre-execution versions.
+        # Purely-overwritten co-variables are excluded: their pre-image is
+        # dead weight a replay would otherwise have to restore first, which
+        # is what makes recompute priceable against fetch (DESIGN.md §18).
+        dep_names = set(self.tracked.read) | set(self.tracked.deleted)
+        if self.check_all:
+            dep_names |= accessed
         prev_index = self.graph.nodes[self.graph.head].state_index
         deps = {}
         for key in delta.candidates:
             ver = prev_index.get(key_str(key))
-            if ver is not None:
+            if ver is not None and any(n in dep_names for n in key):
                 deps[key] = ver
         return _RunPlan(name=name, args=args, delta=delta, deps=deps,
                         stats=stats, t_all=t_all, fb0=fb0)
@@ -301,7 +334,8 @@ class KishuSession:
                    "chunks_encoded": wstats.chunks_encoded,
                    "chunks_codec_skipped": wstats.chunks_codec_skipped,
                    "bytes_dev2host": wstats.bytes_dev2host,
-                   "exec_s": stats.exec_s})
+                   "exec_s": stats.exec_s,
+                   "replay_safe": plan.name not in self._replay_unsafe})
         stats.commit_id = node.commit_id
         stats.covs_updated = len(delta.updated)
         stats.covs_deleted = len(delta.deleted)
@@ -351,6 +385,18 @@ class KishuSession:
             self.covs = group_covariables(self.records)
         self.last_checkout = stats
         return stats
+
+    def plan(self, commit_id: str):
+        """Price a checkout of ``commit_id`` without executing it: the
+        :class:`~repro.core.planner.PricedPlan` behind ``kishu plan``.
+        Pending commits are flushed first so the plan sees the same graph
+        a checkout would."""
+        from repro.core.planner import PricedPlan  # noqa: F401 (re-export)
+        with self.obs.activate(), self.obs.span("plan", commit=commit_id):
+            self.writer.flush()
+            self.engine.flush()
+            return self.planner.price_checkout(
+                self.graph.head, commit_id, records=self.records, ns=self.ns)
 
     # ------------------------------------------------------------------
     # introspection & maintenance

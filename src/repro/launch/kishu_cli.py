@@ -3,6 +3,7 @@
     python -m repro.launch.kishu_cli --store dir:///ckpt log
     python -m repro.launch.kishu_cli --store ... show c00042
     python -m repro.launch.kishu_cli --store ... diff c00012 c00042
+    python -m repro.launch.kishu_cli --store ... plan c00042 [--from c00012]
     python -m repro.launch.kishu_cli --store ... stats
     python -m repro.launch.kishu_cli --store ... verify [--commit cXXXXX]
     python -m repro.launch.kishu_cli --store ... gc
@@ -53,9 +54,33 @@ from repro.core.lease import LEASE_PREFIX, lease_status
 def cmd_log(graph: CheckpointGraph, args) -> int:
     for e in graph.log(limit=args.limit):
         mark = "*" if e["head"] else " "
+        exec_s = f"{e['exec_s']:7.3f}s" if e.get("exec_s") is not None \
+            else "      -"
         print(f"{mark} {e['commit']}  <- {e['parent'] or '-':8s} "
               f"{e['command'] or '':14s} upd={e['updated']:3d} "
-              f"del={e['deleted']:2d}  {e['message']}")
+              f"del={e['deleted']:2d} exec={exec_s}  {e['message']}")
+    return 0
+
+
+def cmd_plan(store, graph: CheckpointGraph, args) -> int:
+    """``kishu plan <commit>``: price a checkout (fetch vs replay per
+    co-variable) without executing it.  The CLI has no live namespace, so
+    chunk-patch candidates don't apply, and no command registry, so
+    replayability relies on the per-commit ``replay_safe`` flag."""
+    from repro.core.checkout import StateLoader
+    from repro.core.planner import CheckoutPlanner, format_plan
+    if args.commit not in graph.nodes:
+        print(f"no such commit: {args.commit}", file=sys.stderr)
+        return 1
+    cur = args.from_ or graph.head
+    if cur not in graph.nodes:
+        print(f"no such commit: {cur}", file=sys.stderr)
+        return 1
+    loader = StateLoader(graph, store)
+    planner = CheckoutPlanner(graph, loader, mode=args.mode)
+    priced = planner.price_checkout(cur, args.commit)
+    for line in format_plan(priced):
+        print(line)
     return 0
 
 
@@ -422,6 +447,12 @@ def main(argv: Optional[list] = None) -> int:
     p = sub.add_parser("diff")
     p.add_argument("a")
     p.add_argument("b")
+    p = sub.add_parser("plan")
+    p.add_argument("commit")
+    p.add_argument("--from", dest="from_", metavar="COMMIT",
+                   help="plan from this commit instead of HEAD")
+    p.add_argument("--mode", default="auto",
+                   choices=["auto", "fetch", "replay"])
     p = sub.add_parser("stats")
     p.add_argument("--metrics", action="store_true",
                    help="Prometheus text exposition instead of the "
@@ -498,6 +529,8 @@ def main(argv: Optional[list] = None) -> int:
         return cmd_show(graph, args)
     if args.cmd == "diff":
         return cmd_diff(graph, args)
+    if args.cmd == "plan":
+        return cmd_plan(store, graph, args)
     if args.cmd == "stats":
         return cmd_stats(store, graph, args)
     if args.cmd == "verify":
